@@ -1,0 +1,142 @@
+"""First-principles per-cell cost model (TPU v5e, per device).
+
+The compiled-HLO parser (roofline.analyze_hlo) is exact for top-level
+collectives and single-level scans, but XLA:CPU's "wide" loop re-cloning
+makes nested-loop multiplicities unreliable as a TPU proxy (see
+EXPERIMENTS.md §Roofline - methodology).  This model provides the primary
+three roofline terms from the architecture configs and sharding layout;
+the parsed numbers corroborate flops on dense archs (within ~2x of the
+remat-corrected model) and the sub-10s-compile collective structure.
+
+Sharding assumptions (parallel/sharding.py): FSDP over `data` (dsz=16),
+TP over `model` (msz=16), batch over data(+pod); params fp32, activations
+bf16, full per-block remat (backward recomputes forward once).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+P32 = 4            # param bytes (fp32 master)
+A16 = 2            # activation bytes (bf16)
+
+
+@dataclass(frozen=True)
+class CellCost:
+    flops: float               # per device, compiled estimate (incl. remat)
+    model_flops: float         # 6ND / 2ND ideal
+    mem_bytes: float           # per device HBM traffic
+    coll_bytes: float          # per device interconnect bytes
+    notes: str = ""
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.mem_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / LINK_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def roofline_frac(self) -> float:
+        ideal = self.model_flops / PEAK_FLOPS
+        worst = max(self.t_compute, self.t_memory, self.t_collective)
+        return ideal / worst if worst > 0 else 0.0
+
+    @property
+    def useful_ratio(self) -> float:
+        return self.model_flops / self.flops if self.flops else 0.0
+
+
+def _attn_layers(cfg) -> int:
+    return sum(1 for k in cfg.layer_kinds() if k == "attn")
+
+
+def cell_cost(arch: str, shape: str, dsz: int = 16, msz: int = 16,
+              pods: int = 1, grad_compression: float = 1.0,
+              gather_bytes: int = P32, grad_bytes: int = P32) -> CellCost:
+    """``gather_bytes``/``grad_bytes``: wire dtype of FSDP weight gathers
+    and gradient reduction (4 = fp32 baseline, 2 = bf16, 1 = int8-equivalent
+    via grad_compression). These are the §Perf hillclimb knobs."""
+    from repro.configs import SHAPES, get_config
+
+    cfg = get_config(arch)
+    sh = SHAPES[shape]
+    n_dev = dsz * msz * pods
+    dp = dsz * pods
+    b, s = sh.global_batch, sh.seq_len
+    b_loc = max(b / dp, 1.0 if b >= dp else b / dp)
+    d = cfg.d_model
+    n_act = cfg.active_param_count()
+    n_tot = cfg.param_count()
+    l_attn = _attn_layers(cfg)
+    l_all = cfg.n_layers
+    kv_bytes_token = 2 * cfg.n_kv_heads * cfg.head_dim * A16
+    if cfg.attention == "mla":
+        kv_bytes_token = (cfg.kv_lora_rank + cfg.rope_head_dim) * A16
+
+    if sh.kind == "train":
+        tokens = b * s
+        model_flops = 6.0 * n_act * tokens / n_dev
+        # attention scores (causal ~ S^2/2), fwd+bwd+remat-recompute
+        attn_flops = 3 * 4 * b * s * s * 0.5 * d * l_attn / l_all / n_dev \
+            * l_all if l_attn else 0.0
+        attn_flops = 3 * (4 * b * s * s * 0.5 * d) * l_attn / n_dev
+        flops = (8.0 / 6.0) * model_flops + attn_flops
+        # memory: weights 3 passes of the TP shard (post data all-gather),
+        # optimizer local shard r/w, activation block boundaries x alpha
+        w_pass = n_act * P32 / msz
+        opt = 2 * 5 * n_tot * P32 / (msz * dsz)
+        act = 8 * l_all * b_loc * s * d * A16
+        mem = 3 * w_pass + opt + act
+        # collectives: FSDP weight AG x3 (fwd/bwd/recompute), grad
+        # reduce-scatter, TP 2 all-reduce/layer x3 passes, MoE a2a
+        # (3 passes), pod-axis DP ring
+        coll = (3 * n_act * gather_bytes / msz
+                + n_tot * grad_bytes / msz * grad_compression)
+        coll += 3 * 4 * l_all * b_loc * s * d * A16 / 2
+        if cfg.n_experts:
+            n_moe = sum(cfg.layer_is_moe(i) for i in range(l_all))
+            coll += 3 * 2 * n_moe * b_loc * s * d * A16 * max(cfg.top_k, 1)
+        if pods > 1:
+            coll += 2 * n_tot * grad_bytes / (msz * dsz) * grad_compression
+        return CellCost(flops, model_flops, mem, coll,
+                        "train: FSDP+TP, full remat")
+
+    if sh.kind == "prefill":
+        tokens = b * s
+        model_flops = 2.0 * n_act * tokens / n_dev
+        attn_flops = (4 * b * s * s * 0.5 * d) * l_attn / n_dev
+        flops = model_flops + attn_flops
+        w_pass = n_act * P32 / msz
+        act = 6 * l_all * b_loc * s * d * A16
+        cache_w = l_attn * b_loc * s * kv_bytes_token
+        mem = w_pass + act + cache_w
+        coll = n_act * P32 / msz + 4 * l_all * b_loc * s * d * A16 / 2
+        return CellCost(flops, model_flops, mem, coll, "prefill: 1 pass")
+
+    # decode: one token, cache length s
+    model_flops = 2.0 * n_act * b / n_dev
+    attn_flops = (4 * b * s * d) * l_attn / n_dev
+    flops = model_flops + attn_flops
+    # weights: each device reads its TP+FSDP shard once (decode is
+    # bandwidth-bound on weights + cache; no data-axis all-gather needed)
+    w_read = n_act * P32 / (msz * dsz)
+    cache_read = l_attn * b * s * kv_bytes_token / n_dev
+    act = 4 * l_all * b_loc * d * A16
+    mem = w_read + cache_read + act
+    coll = 2 * l_all * b_loc * d * A16 + cfg.vocab * A16
+    return CellCost(flops, model_flops, mem, coll,
+                    "decode: sharded weights + cache stream")

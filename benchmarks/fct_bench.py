@@ -1,0 +1,67 @@
+"""Paper Fig 5 + Fig 6: flow completion times and link utilization for the
+websearch workload, 5%..70% load, all systems."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.schedule import (
+    greedy_matching_schedule,
+    oblivious_schedule,
+    vermilion_schedule,
+)
+from repro.core.simulator import simulate, websearch_workload
+
+RECFG = 1 / 9
+BITS_PER_SLOT = 100e9 * 4.5e-6          # 100G links, 4.5us slots (paper)
+SHORT = 100e3 * 8                        # <=100KB flows
+LONG = 1e6 * 8                           # >1MB flows
+
+
+def run(n: int = 16, d_hat: int = 4, horizon: int = 4000,
+        loads=(0.05, 0.15, 0.3, 0.45, 0.6, 0.7), seed: int = 1) -> list[dict]:
+    rows = []
+    obl = oblivious_schedule(n, d_hat=d_hat, recfg_frac=RECFG)
+    for load in loads:
+        wl = websearch_workload(n, load, horizon, BITS_PER_SLOT,
+                                d_hat=d_hat, seed=seed)
+        m = wl.demand_matrix()
+        systems = {
+            "vermilion": (vermilion_schedule(
+                m, k=3, d_hat=d_hat, recfg_frac=RECFG,
+                normalize="saturate"), "single_hop"),
+            "greedy": (greedy_matching_schedule(
+                m, n_matchings=3 * n, d_hat=d_hat, recfg_frac=RECFG),
+                "single_hop"),
+            "rotorlb": (obl, "rotorlb"),
+            "vlb": (obl, "vlb"),
+            "obl-singlehop": (obl, "single_hop"),
+        }
+        for name, (sched, mode) in systems.items():
+            t0 = time.perf_counter()
+            r = simulate(sched, wl, BITS_PER_SLOT, mode=mode)
+            rows.append({
+                "system": name, "load": load,
+                "p99_short": r.fct_percentile(99, short_cutoff=SHORT),
+                "p99_long": r.fct_percentile(99, long_cutoff=LONG),
+                "p50_short": r.fct_percentile(50, short_cutoff=SHORT),
+                "util": r.utilization,
+                "done": r.completed_frac,
+                "hops": r.avg_hops,
+                "us": (time.perf_counter() - t0) * 1e6,
+            })
+    return rows
+
+
+def main() -> None:
+    rows = run()
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(f"fct_fig5[{r['system']},load={r['load']}],{r['us']:.0f},"
+              f"p99short={r['p99_short']:.0f};p99long={r['p99_long']:.0f};"
+              f"util={r['util']:.3f};done={r['done']:.3f};hops={r['hops']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Level-B bridge: inter-pod collective pricing under Vermilion vs oblivious.
+
+For each assigned architecture's train_4k cell, derive the pod-axis traffic
+matrix of one training step (DP gradient ring + MoE all-to-all spillover),
+price it on the optical interconnect under each scheduling system, and
+report the resulting collective step-time — the paper's technique as a
+roofline multiplier (DESIGN.md §7).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.configs import REGISTRY, get_config
+from repro.core.collectives import InterconnectModel, training_step_traffic
+
+N_PODS = 8          # a plausible optical fabric: 8 pods of 256 chips
+IC = InterconnectModel(link_gbps=400, d_hat=8, recfg_frac=1 / 9, k=3)
+
+
+def run() -> list[dict]:
+    rows = []
+    for arch in sorted(REGISTRY):
+        cfg = get_config(arch)
+        grad_bytes = cfg.param_count() * 4 / 256          # per-pod shard, fp32
+        moe = cfg.d_model * 4096 * 256 * 2 * 0.1 if cfg.n_experts else 0.0
+        m = training_step_traffic(N_PODS, grad_bytes, moe_alltoall_bytes=moe)
+        t0 = time.perf_counter()
+        row = {
+            "arch": arch,
+            "t_vermilion": IC.step_time(m, "vermilion"),
+            "t_oblivious": IC.step_time(m, "oblivious"),
+            "t_obl_singlehop": IC.step_time(m, "oblivious-singlehop"),
+        }
+        m_c = training_step_traffic(N_PODS, grad_bytes,
+                                    moe_alltoall_bytes=moe, compression=0.25)
+        row["t_vermilion_int8"] = IC.step_time(m_c, "vermilion")
+        row["speedup"] = row["t_oblivious"] / row["t_vermilion"]
+        row["us"] = (time.perf_counter() - t0) * 1e6
+        rows.append(row)
+    return rows
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    for r in run():
+        print(f"interconnect[{r['arch']}],{r['us']:.0f},"
+              f"verm={r['t_vermilion'] * 1e3:.2f}ms;"
+              f"obl={r['t_oblivious'] * 1e3:.2f}ms;"
+              f"verm_int8={r['t_vermilion_int8'] * 1e3:.2f}ms;"
+              f"speedup={r['speedup']:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,319 @@
+"""Roofline analysis from the dry-run's compiled (post-SPMD) HLO.
+
+XLA's ``cost_analysis`` counts loop bodies ONCE, but our models scan over
+layer supercells (and attention/loss/mamba chunks), so collectives and
+FLOPs live inside ``while`` bodies.  This parser walks the HLO computation
+graph, assigns every computation its *execution multiplicity* (product of
+enclosing while trip counts), and sums:
+
+* dot FLOPs x multiplicity                          -> compute term
+* materializing op bytes x multiplicity              -> memory term
+  (fusion interiors excluded: fused ops never touch HBM)
+* collective operand bytes x multiplicity            -> collective term
+
+Hardware model (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+HLO is per-partition (SPMD), so all sums are per-device.
+"""
+from __future__ import annotations
+
+import glob
+import gzip
+import json
+import os
+import re
+import sys
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_DT_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+             "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+             "f64": 8, "c64": 8, "c128": 16, "token": 0}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_NAME_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)")
+_OP_RE = re.compile(r"^\s+(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_PARAM_RE = re.compile(r"%?([\w.\-]+):\s*([a-z0-9]+)\[([0-9,]*)\]")
+_CALL_RE = re.compile(
+    r"(condition|body|calls|to_apply|true_computation|false_computation)"
+    r"=%?([\w.\-]+)"
+    r"|(branch_computations)=\{([^}]*)\}")
+
+
+def _shape_bytes(dt: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DT_BYTES.get(dt, 4)
+
+
+def _split_blocks(text: str) -> dict:
+    """name -> {entry, lines, header}. Computations start at column 0 and
+    end with a line whose first char is '}' (nested parens in headers make
+    regex-only splitting unreliable)."""
+    blocks = {}
+    cur = None
+    for line in text.splitlines():
+        if line and not line[0].isspace() and line.rstrip().endswith("{"):
+            m = _NAME_RE.match(line)
+            if not m:
+                continue
+            cur = m.group(2)
+            blocks[cur] = {"entry": bool(m.group(1)), "lines": [],
+                           "header": line}
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is not None and "=" in line:
+            blocks[cur]["lines"].append(line)
+    return blocks
+
+
+def _trip_count(cond_lines: list[str]) -> int:
+    best = 1
+    for ln in cond_lines:
+        for m in re.finditer(r"constant\((\d+)\)", ln):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def analyze_hlo(text: str) -> dict:
+    blocks = _split_blocks(text)
+    entry = next((n for n, b in blocks.items() if b["entry"]), None)
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+
+    # call edges: (callee, kind, parent)
+    calls: dict[str, list[tuple[str, str]]] = {n: [] for n in blocks}
+    while_info: dict[str, tuple[str, str]] = {}   # body -> (cond, parent)
+    fused_callees: set[str] = set()
+    for name, b in blocks.items():
+        for ln in b["lines"]:
+            is_fusion = " fusion(" in ln
+            cond, body = None, None
+            for cm in _CALL_RE.finditer(ln):
+                key = cm.group(1) or cm.group(3)
+                targets = cm.group(2) or cm.group(4) or ""
+                for callee in re.split(r",\s*%?", targets):
+                    callee = callee.strip().lstrip("%")
+                    if callee not in blocks:
+                        continue
+                    calls[callee].append((name, key))
+                    if is_fusion or key in ("to_apply",):
+                        fused_callees.add(callee)
+                    if key == "condition":
+                        cond = callee
+                    elif key == "body":
+                        body = callee
+            if body is not None:
+                while_info[body] = (cond, name)
+
+    # multiplicity via BFS from entry
+    mult: dict[str, float] = {entry: 1.0}
+    changed = True
+    guard = 0
+    while changed and guard < 200:
+        changed = False
+        guard += 1
+        for name, parents in calls.items():
+            m = 0.0
+            for parent, kind in parents:
+                pm = mult.get(parent)
+                if pm is None:
+                    continue
+                k = pm
+                if kind == "body":
+                    cond = while_info.get(name, (None, None))[0]
+                    trips = _trip_count(blocks[cond]["lines"]) if cond else 1
+                    k = pm * trips
+                m = max(m, k)
+            if m > 0 and mult.get(name) != m:
+                mult[name] = m
+                changed = True
+
+    # fused interiors: flops yes, bytes no
+    fused_closure = set(fused_callees)
+    for _ in range(10):
+        add = set()
+        for name, parents in calls.items():
+            if any(p in fused_closure for p, _ in parents):
+                add.add(name)
+        if add <= fused_closure:
+            break
+        fused_closure |= add
+
+    flops = 0.0
+    mem_bytes = 0.0
+    coll = {k: 0.0 for k in COLLECTIVES}
+    coll_counts = {k: 0 for k in COLLECTIVES}
+    _MEM_OPS = frozenset((
+        "fusion", "dot", "convolution", "copy", "scatter", "gather",
+        "dynamic-update-slice", "dynamic-slice", "reduce", "broadcast",
+        "transpose", "concatenate", "pad", "select", "add", "multiply",
+        "convert", "bitcast-convert",
+    ))
+    for name, b in blocks.items():
+        m = mult.get(name, 0.0)
+        if m == 0:
+            continue
+        in_fusion = name in fused_closure
+        # per-block symbol table: op/param name -> (dtype, dims)
+        symtab: dict[str, tuple[str, str]] = {}
+        for pname, dt, dims in _PARAM_RE.findall(b["header"]):
+            symtab[pname] = (dt, dims)
+        parsed = []
+        for ln in b["lines"]:
+            om = _OP_RE.match(ln)
+            if not om:
+                continue
+            lhs_name, rhs = om.group(1), om.group(2)
+            shapes = _SHAPE_RE.findall(rhs.split(" ", 1)[0] + " ")
+            sm = _SHAPE_RE.match(rhs)
+            if sm:
+                symtab[lhs_name] = (sm.group(1), sm.group(2))
+            parsed.append((lhs_name, rhs))
+
+        for lhs_name, rhs in parsed:
+            sm = _SHAPE_RE.match(rhs) or _SHAPE_RE.search(rhs)
+            if not sm:
+                continue
+            result_dt, result_dims = sm.group(1), sm.group(2)
+
+            if " dot(" in rhs:
+                cdim = 1
+                cm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", rhs)
+                am = re.search(r"dot\(%?([\w.\-]+)", rhs)
+                if cm and am and am.group(1) in symtab:
+                    lhs_dims = [int(x) for x in
+                                symtab[am.group(1)][1].split(",") if x]
+                    for idx in cm.group(1).split(","):
+                        if idx and int(idx) < len(lhs_dims):
+                            cdim *= lhs_dims[int(idx)]
+                n = 1
+                for dd in result_dims.split(","):
+                    if dd:
+                        n *= int(dd)
+                flops += 2.0 * n * cdim * m
+
+            opm = re.search(
+                r"\s(" + "|".join(COLLECTIVES) + r")(?:-start)?\(", rhs)
+            if opm:
+                op = opm.group(1)
+                coll[op] += _shape_bytes(result_dt, result_dims) * m
+                coll_counts[op] += int(m)
+
+            if not in_fusion:
+                kind = re.search(r"\s([a-z][a-z0-9\-]*)\(", rhs)
+                if (kind and kind.group(1) in _MEM_OPS) or opm:
+                    mem_bytes += _shape_bytes(result_dt, result_dims) * m
+                    # operand traffic, resolved through the symbol table
+                    args = re.search(r"\(([^)]*)\)", rhs)
+                    if args:
+                        for an in re.findall(r"%?([\w.\-]+)",
+                                             args.group(1)):
+                            if an in symtab:
+                                mem_bytes += _shape_bytes(*symtab[an]) * m
+
+    return {
+        "flops": flops,
+        "mem_bytes": mem_bytes,
+        "collective_bytes": sum(coll.values()),
+        "collective_by_kind": coll,
+        "collective_counts": coll_counts,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Analytic model FLOPs (6 N D / 2 N D), for the usefulness ratio
+# ---------------------------------------------------------------------------
+
+def model_flops(arch: str, shape: str) -> float:
+    from repro.configs import SHAPES, get_config
+
+    cfg = get_config(arch)
+    sh = SHAPES[shape]
+    n_active = cfg.active_param_count()
+    if sh.kind == "train":
+        tokens = sh.global_batch * sh.seq_len
+        return 6.0 * n_active * tokens
+    if sh.kind == "prefill":
+        tokens = sh.global_batch * sh.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * sh.global_batch
+
+
+def roofline_row(json_path: str, hlo_path: str | None) -> dict:
+    with open(json_path) as f:
+        cell = json.load(f)
+    n_dev = cell["n_devices"]
+    row = {
+        "arch": cell["arch"], "shape": cell["shape"], "mesh": cell["mesh"],
+        "compile_s": cell.get("compile_s"),
+    }
+    if hlo_path and os.path.exists(hlo_path):
+        with gzip.open(hlo_path, "rt") as f:
+            a = analyze_hlo(f.read())
+    else:
+        a = {"flops": cell.get("flops_per_device") or 0,
+             "mem_bytes": cell.get("bytes_per_device") or 0,
+             "collective_bytes": sum(
+                 v for k, v in cell["collectives"].items()
+                 if k != "counts"),
+             "collective_by_kind": {}}
+    t_c = a["flops"] / PEAK_FLOPS
+    t_m = a["mem_bytes"] / HBM_BW
+    t_x = a["collective_bytes"] / LINK_BW
+    dominant = max((("compute", t_c), ("memory", t_m), ("collective", t_x)),
+                   key=lambda kv: kv[1])[0]
+    mf = model_flops(cell["arch"], cell["shape"]) / n_dev
+    row.update({
+        "t_compute_s": t_c, "t_memory_s": t_m, "t_collective_s": t_x,
+        "dominant": dominant,
+        "hlo_flops_per_dev": a["flops"],
+        "hlo_bytes_per_dev": a["mem_bytes"],
+        "coll_bytes_per_dev": a["collective_bytes"],
+        "model_flops_per_dev": mf,
+        "useful_ratio": mf / a["flops"] if a["flops"] else 0.0,
+        "roofline_frac": (mf / PEAK_FLOPS) / max(t_c, t_m, t_x)
+        if max(t_c, t_m, t_x) > 0 else 0.0,
+    })
+    return row
+
+
+def full_table(results_dir: str = "results/dryrun") -> list[dict]:
+    rows = []
+    for jp in sorted(glob.glob(os.path.join(results_dir, "*__sp.json"))):
+        hlo = jp.replace(".json", ".hlo.gz")
+        try:
+            rows.append(roofline_row(jp, hlo))
+        except Exception as e:  # pragma: no cover
+            rows.append({"arch": os.path.basename(jp), "error": str(e)})
+    return rows
+
+
+def main() -> None:
+    out = full_table(sys.argv[1] if len(sys.argv) > 1 else "results/dryrun")
+    os.makedirs("results", exist_ok=True)
+    with open("results/roofline.json", "w") as f:
+        json.dump(out, f, indent=1)
+    hdr = (f"{'arch':28s} {'shape':12s} {'comp(s)':>9s} {'mem(s)':>9s} "
+           f"{'coll(s)':>9s} {'dom':>10s} {'useful':>7s} {'roofl%':>7s}")
+    print(hdr)
+    for r in out:
+        if "error" in r:
+            print(r["arch"], "ERROR", r["error"][:80])
+            continue
+        print(f"{r['arch']:28s} {r['shape']:12s} {r['t_compute_s']:9.2e} "
+              f"{r['t_memory_s']:9.2e} {r['t_collective_s']:9.2e} "
+              f"{r['dominant']:>10s} {r['useful_ratio']:7.2f} "
+              f"{100 * r['roofline_frac']:6.1f}%")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Benchmark harness: one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Sections:
+  - throughput_fig7     (Fig 7: throughput across demand matrices)
+  - bound_fig8a/b       (Fig 8: convergence to (k-1)/k)
+  - fct_fig5            (Fig 5/6: FCT + utilization, websearch)
+  - schedule_time_fig10 (Fig 10: schedule computation latency)
+  - interconnect        (DESIGN.md §7: pod-axis collective pricing)
+  - roofline            (per-cell analytic three-term summary)
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from . import (
+        bound_convergence,
+        fct_bench,
+        interconnect_bench,
+        schedule_time,
+        throughput_bench,
+    )
+
+    throughput_bench.main()
+    sys.stdout.flush()
+    bound_convergence.main()
+    sys.stdout.flush()
+    fct_bench.main()
+    sys.stdout.flush()
+    schedule_time.main()
+    sys.stdout.flush()
+    interconnect_bench.main()
+    sys.stdout.flush()
+
+    # roofline summary (analytic three terms per assigned cell)
+    from .analytic import cell_cost
+    from repro.configs import REGISTRY, shape_cells
+    for arch in sorted(REGISTRY):
+        for shape in shape_cells(arch):
+            c = cell_cost(arch, shape)
+            print(f"roofline[{arch},{shape}],0,"
+                  f"tc={c.t_compute:.3e};tm={c.t_memory:.3e};"
+                  f"tx={c.t_collective:.3e};dom={c.dominant};"
+                  f"frac={c.roofline_frac:.3f}")
+
+
+if __name__ == "__main__":
+    main()

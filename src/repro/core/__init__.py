@@ -1,0 +1,61 @@
+"""Vermilion core: traffic-aware periodic optical interconnect scheduling.
+
+The paper's contribution (Algorithm 1 + baselines + throughput theory),
+with a flow-level simulator and JAX-native schedule execution.
+"""
+from .traffic import (
+    hose_normalize,
+    is_hose,
+    saturate,
+    uniform,
+    ring,
+    permutation,
+    skewed,
+    dlrm_data_parallel,
+    dlrm_hybrid_parallel,
+    random_hose,
+)
+from .rounding import round_matrix, check_rounding
+from .matching import (
+    decompose_matchings,
+    decompose_matchings_euler,
+    extract_perfect_matching,
+    is_regular,
+)
+from .schedule import (
+    Schedule,
+    vermilion_schedule,
+    vermilion_emulated_topology,
+    oblivious_schedule,
+    greedy_matching_schedule,
+    bvn_schedule,
+    bvn_decompose,
+    quantize_bvn,
+    spread_matchings,
+)
+from .throughput import (
+    throughput_single_hop,
+    throughput_multi_hop,
+    schedule_throughput,
+    vermilion_throughput,
+    oblivious_throughput,
+    theorem3_bound,
+)
+from .simulator import (
+    Workload,
+    websearch_workload,
+    SimResult,
+    simulate,
+    simulate_aggregate_jax,
+)
+from .estimation import TrafficEstimator, allgather_rows, quantize_row
+from .collectives import (
+    ring_allreduce_traffic,
+    all_to_all_traffic,
+    pipeline_traffic,
+    hierarchical_traffic,
+    training_step_traffic,
+    InterconnectModel,
+)
+
+__all__ = [k for k in dir() if not k.startswith("_")]

@@ -1,0 +1,92 @@
+"""Distributed traffic-matrix estimation (paper Appendix A, Q1-Q4).
+
+Each node keeps an EWMA of its outgoing traffic (one row of the global
+matrix).  During the round-robin (traffic-oblivious residual) phase of
+Vermilion's schedule, nodes AllGather their quantized rows so that by the
+end of the phase every node holds the full (normalized, rounded) matrix and
+can compute the next schedule locally — no central controller on the fast
+path.
+
+Quantization follows A1: each entry is scaled by (k-1)/k * 1/(c*Delta),
+floored, and clipped to 16 bits (65535), supporting up to n = 21845 ToRs.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+__all__ = ["TrafficEstimator", "allgather_rows", "quantize_row"]
+
+
+def quantize_row(
+    row: np.ndarray, k: int, bits_per_slot: float
+) -> np.ndarray:
+    """A1's two-step transform: normalize then floor; 16-bit saturating."""
+    scaled = row * ((k - 1) / k) / bits_per_slot
+    return np.clip(np.floor(scaled), 0, 65535).astype(np.uint16)
+
+
+def allgather_rows(local_rows: np.ndarray, steps: int | None = None) -> np.ndarray:
+    """Ring AllGather of per-node rows over the round-robin phase.
+
+    ``local_rows[i]`` is node i's row.  Each of the n-1 round-robin slots
+    forwards one more row to the direct neighbor, mimicking the pipelined
+    exchange of Figure 9.  Returns the (n, n, n) per-node views; view[i] is
+    the matrix node i has assembled.  With ``steps < n-1`` the gather is
+    partial (models mid-phase failure); missing rows are zero.
+    """
+    n = local_rows.shape[0]
+    steps = n - 1 if steps is None else steps
+    views = np.zeros((n, n, local_rows.shape[1]), dtype=local_rows.dtype)
+    for i in range(n):
+        views[i, i] = local_rows[i]
+    # slot t: node i forwards everything it has to neighbor (i+1) mod n;
+    # after n-1 slots all views are complete (linear pipeline).
+    have = np.eye(n, dtype=bool)
+    for _ in range(steps):
+        new_have = have.copy()
+        for i in range(n):
+            j = (i + 1) % n
+            gained = have[i] & ~have[j]
+            views[j, gained] = views[i, gained]
+            new_have[j] |= have[i]
+        have = new_have
+    return views
+
+
+@dataclass
+class TrafficEstimator:
+    """Per-node EWMA of VOQ byte counters (A2/A4)."""
+
+    n: int
+    alpha: float = 0.3                      # EWMA weight of the newest period
+    ewma: np.ndarray = field(default=None)  # type: ignore[assignment]
+
+    def __post_init__(self) -> None:
+        if self.ewma is None:
+            self.ewma = np.zeros((self.n,), dtype=np.float64)
+
+    def update(self, period_bits: np.ndarray) -> np.ndarray:
+        """Fold one period's VOQ counters into the EWMA and reset counters."""
+        self.ewma = (1 - self.alpha) * self.ewma + self.alpha * period_bits
+        return self.ewma
+
+
+def estimate_global_matrix(
+    per_node_period_bits: np.ndarray,
+    estimators: list[TrafficEstimator],
+    k: int,
+    bits_per_slot: float,
+) -> np.ndarray:
+    """One full estimation round: EWMA update, quantize, AllGather;
+    returns the consistent global matrix every node ends up with."""
+    n = len(estimators)
+    rows = np.stack([
+        quantize_row(est.update(per_node_period_bits[i]), k, bits_per_slot)
+        for i, est in enumerate(estimators)
+    ])
+    views = allgather_rows(rows)
+    # all views identical after a complete phase
+    assert (views == views[0]).all()
+    return views[0].astype(np.float64)

@@ -1,0 +1,149 @@
+"""Decomposition of regular directed multigraphs into perfect matchings.
+
+A directed multigraph on n nodes with all in-degrees == all out-degrees == D
+(represented as an integer matrix E, E[u, v] = edge multiplicity) decomposes
+into exactly D perfect matchings (Koenig / Birkhoff for integer matrices).
+These matchings ARE Vermilion's periodic schedule.
+
+Two algorithms:
+
+* :func:`decompose_matchings` — D rounds of Hopcroft-Karp
+  (scipy's C implementation).  O(D * E * sqrt(n)).
+* :func:`decompose_matchings_euler` — recursive Euler splitting: an even-D
+  regular bipartite multigraph splits into two D/2-regular halves by
+  alternating edges along Euler circuits.  O(E log D) — this is our TPU-era
+  answer to the paper's CUDA decomposition helper (Fig 10), benchmarked in
+  ``benchmarks/schedule_time.py``.
+"""
+from __future__ import annotations
+
+import numpy as np
+from scipy.sparse import csr_matrix
+from scipy.sparse.csgraph import maximum_bipartite_matching
+
+__all__ = [
+    "is_regular",
+    "extract_perfect_matching",
+    "decompose_matchings",
+    "decompose_matchings_euler",
+]
+
+
+def is_regular(e: np.ndarray) -> bool:
+    e = np.asarray(e)
+    rs, cs = e.sum(axis=1), e.sum(axis=0)
+    return bool((rs == rs[0]).all() and (cs == rs[0]).all())
+
+
+def extract_perfect_matching(e: np.ndarray) -> np.ndarray:
+    """Return perm with perm[u] = v, a perfect matching on the support of e.
+
+    Raises ValueError if none exists (cannot happen for regular e, by Hall).
+    """
+    support = csr_matrix((e > 0).astype(np.int8))
+    match = maximum_bipartite_matching(support, perm_type="column")
+    if (match < 0).any():
+        raise ValueError("no perfect matching on support (graph not regular?)")
+    return match.astype(np.int64)
+
+
+def decompose_matchings(e: np.ndarray) -> np.ndarray:
+    """Decompose regular integer matrix ``e`` into (D, n) permutation array."""
+    e = np.asarray(e, dtype=np.int64).copy()
+    if not is_regular(e):
+        raise ValueError("matrix is not regular (row sums != col sums)")
+    d = int(e.sum(axis=1)[0])
+    n = e.shape[0]
+    out = np.empty((d, n), dtype=np.int64)
+    idx = np.arange(n)
+    for t in range(d):
+        perm = extract_perfect_matching(e)
+        out[t] = perm
+        e[idx, perm] -= 1
+    assert (e == 0).all()
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Euler-split fast path
+# ---------------------------------------------------------------------------
+
+def _euler_split(e: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Split even-regular ``e`` into two D/2-regular halves via Euler circuits.
+
+    View e as an undirected bipartite multigraph (left=rows, right=cols);
+    every vertex has even degree, so edges partition into closed trails.
+    Walking a trail alternates left->right / right->left steps; assign
+    left->right traversals to half A and right->left traversals
+    (re-oriented) to half B.  Each left vertex alternates out/in along the
+    trail, so both halves are exactly D/2-regular.
+    """
+    n = e.shape[0]
+    # adjacency stacks with multiplicity, for both orientations
+    rem = e.astype(np.int64).copy()          # remaining l->r multiplicity
+    rem_t = rem.T.copy()                      # remaining r->l multiplicity
+    a = np.zeros_like(rem)
+    b = np.zeros_like(rem)
+    # per-vertex scan pointers to amortize neighbor search
+    ptr_l = np.zeros(n, dtype=np.int64)
+    ptr_r = np.zeros(n, dtype=np.int64)
+    deg_l = rem.sum(axis=1)
+    for start in range(n):
+        while deg_l[start] > 0:
+            u, on_left = start, True
+            while True:
+                if on_left:
+                    while ptr_l[u] < n and rem[u, ptr_l[u]] == 0:
+                        ptr_l[u] += 1
+                    if ptr_l[u] == n:
+                        break  # trail closed
+                    v = ptr_l[u]
+                    rem[u, v] -= 1
+                    rem_t[v, u] -= 1
+                    deg_l[u] -= 1
+                    a[u, v] += 1
+                    u, on_left = v, False
+                else:
+                    while ptr_r[u] < n and rem_t[u, ptr_r[u]] == 0:
+                        ptr_r[u] += 1
+                    if ptr_r[u] == n:
+                        # right vertex exhausted: reset pointer (multigraph
+                        # trails can revisit); rescan from 0
+                        if rem_t[u].sum() == 0:
+                            break
+                        ptr_r[u] = 0
+                        continue
+                    v = ptr_r[u]
+                    rem_t[u, v] -= 1
+                    rem[v, u] -= 1
+                    deg_l[v] -= 1
+                    b[v, u] += 1
+                    u, on_left = v, True
+            # pointer for left vertex may also need reset on revisit
+            if deg_l[start] > 0 and ptr_l[start] == n:
+                ptr_l[start] = 0
+    return a, b
+
+
+def decompose_matchings_euler(e: np.ndarray) -> np.ndarray:
+    """Euler-split decomposition (fast path). Same output contract as
+    :func:`decompose_matchings` (set of matchings; order may differ)."""
+    e = np.asarray(e, dtype=np.int64)
+    if not is_regular(e):
+        raise ValueError("matrix is not regular")
+    d = int(e.sum(axis=1)[0])
+    n = e.shape[0]
+    if d == 0:
+        return np.empty((0, n), dtype=np.int64)
+    if d == 1:
+        perm = np.argmax(e, axis=1)
+        return perm[None, :]
+    if d % 2 == 1:
+        perm = extract_perfect_matching(e)
+        rest = e.copy()
+        rest[np.arange(n), perm] -= 1
+        return np.concatenate([perm[None, :], decompose_matchings_euler(rest)])
+    a, b = _euler_split(e)
+    return np.concatenate(
+        [decompose_matchings_euler(a), decompose_matchings_euler(b)]
+    )

@@ -1,0 +1,102 @@
+"""Matrix rounding (Bacharach 1966) — the key primitive of Vermilion.
+
+Given a nonnegative real matrix A, produce an integer matrix R with
+
+* ``R[i, j] in {floor(A[i, j]), ceil(A[i, j])}`` for every entry,
+* every row sum of R in ``{floor(rowsum_i), ceil(rowsum_i)}``,
+* every column sum of R in ``{floor(colsum_j), ceil(colsum_j)}``.
+
+Such a rounding always exists (Bacharach 1966); we compute one with a single
+integral max-flow (scipy's C Dinic implementation), after augmenting A with a
+slack row/column that makes every row and column sum integral.  The
+fractional matrix itself is a feasible fractional flow for the constructed
+network, so by flow integrality the max-flow saturates the source and yields
+the rounding.  Complexity: O(E * sqrt(V)) per call — microseconds for n<=64,
+milliseconds for n in the hundreds (cf. paper Fig 10).
+"""
+from __future__ import annotations
+
+import numpy as np
+from scipy.sparse import csr_matrix
+from scipy.sparse.csgraph import maximum_flow
+
+__all__ = ["round_matrix", "check_rounding"]
+
+_EPS = 1e-9
+
+
+def _snap(a: np.ndarray, eps: float = _EPS) -> np.ndarray:
+    """Snap near-integer values exactly to integers (float-noise hygiene)."""
+    r = np.rint(a)
+    return np.where(np.abs(a - r) <= eps, r, a)
+
+
+def round_matrix(a: np.ndarray, seed: int | None = None) -> np.ndarray:
+    """Bacharach-round ``a``. Deterministic; ``seed`` is accepted for API
+    symmetry with the randomized steps of Algorithm 1 but unused."""
+    a = _snap(np.asarray(a, dtype=np.float64))
+    if a.ndim != 2:
+        raise ValueError("expected a matrix")
+    if (a < 0).any():
+        raise ValueError("matrix must be nonnegative")
+    n_r, n_c = a.shape
+
+    # --- augment with a slack column/row so all row & col sums are integral
+    rs = a.sum(axis=1)
+    cs = a.sum(axis=0)
+    slack_col = _snap(np.ceil(rs - _EPS) - rs)          # in [0, 1)
+    slack_row = _snap(np.ceil(cs - _EPS) - cs)
+    # corner = frac(total): makes both the slack row's and the slack
+    # column's sums integral (their fractional parts are each -total mod 1).
+    corner = _snap(np.asarray(a.sum() % 1.0)).item() % 1.0
+    aug = np.zeros((n_r + 1, n_c + 1))
+    aug[:n_r, :n_c] = a
+    aug[:n_r, n_c] = slack_col
+    aug[n_r, :n_c] = slack_row
+    aug[n_r, n_c] = corner
+
+    base = np.floor(aug + _EPS)
+    frac = _snap(aug - base)
+    frac = np.where(frac <= _EPS, 0.0, frac)
+
+    # integer #round-ups needed per row / column of the augmented matrix
+    e = np.rint(aug.sum(axis=1) - base.sum(axis=1)).astype(np.int64)
+    g = np.rint(aug.sum(axis=0) - base.sum(axis=0)).astype(np.int64)
+    if e.sum() != g.sum():  # pragma: no cover - defensive
+        raise AssertionError("augmentation failed to balance round-ups")
+
+    if e.sum() == 0:
+        return base[:n_r, :n_c].astype(np.int64)
+
+    # --- max-flow: src -> rows (cap e) -> frac cells (cap 1) -> cols (cap g) -> snk
+    rows, cols = np.nonzero(frac)
+    nr, nc = n_r + 1, n_c + 1
+    src, snk = nr + nc, nr + nc + 1
+    u = np.concatenate([np.full(nr, src), rows, nr + np.arange(nc)])
+    v = np.concatenate([np.arange(nr), nr + cols, np.full(nc, snk)])
+    cap = np.concatenate([e, np.ones(len(rows), dtype=np.int64), g])
+    graph = csr_matrix((cap, (u, v)), shape=(nr + nc + 2, nr + nc + 2))
+    res = maximum_flow(graph, src, snk)
+    if res.flow_value != e.sum():  # pragma: no cover - theory guarantees this
+        raise AssertionError(
+            f"rounding flow infeasible: {res.flow_value} != {e.sum()}"
+        )
+    flow = res.flow.tocoo()
+    up = np.zeros_like(base)
+    m = (flow.data > 0) & (flow.row < nr) & (flow.col >= nr) & (flow.col < nr + nc)
+    up[flow.row[m], flow.col[m] - nr] = 1.0
+
+    out = (base + up)[:n_r, :n_c]
+    return np.rint(out).astype(np.int64)
+
+
+def check_rounding(a: np.ndarray, r: np.ndarray, tol: float = 1e-6) -> None:
+    """Assert the three Bacharach properties; raises AssertionError if violated."""
+    a = np.asarray(a, dtype=np.float64)
+    r = np.asarray(r)
+    lo, hi = np.floor(a - tol), np.ceil(a + tol)
+    assert ((r >= lo - tol) & (r <= hi + tol)).all(), "entry not floor/ceil"
+    for axis in (0, 1):
+        s, t = a.sum(axis=axis), r.sum(axis=axis)
+        assert (t >= np.floor(s - tol) - tol).all(), "sum below floor"
+        assert (t <= np.ceil(s + tol) + tol).all(), "sum above ceil"

@@ -1,0 +1,281 @@
+"""Periodic circuit-switching schedules: Vermilion (Algorithm 1) + baselines.
+
+A schedule is a sequence of perfect matchings executed round-robin at fixed
+slot duration on d_hat parallel port planes.  The *emulated graph* (paper
+§2.1 / Appendix B) is the time-collapsed capacity matrix over one period.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+from scipy.optimize import linear_sum_assignment
+
+from .matching import decompose_matchings, extract_perfect_matching
+from .rounding import round_matrix
+from .traffic import hose_normalize, saturate
+
+__all__ = [
+    "Schedule",
+    "vermilion_schedule",
+    "oblivious_schedule",
+    "greedy_matching_schedule",
+    "bvn_schedule",
+    "quantize_bvn",
+]
+
+
+@dataclass(frozen=True)
+class Schedule:
+    """A periodic fixed-duration circuit-switching schedule.
+
+    perms[t, u] = v means matching t provides circuit u -> v for one slot.
+    ``d_hat`` matchings execute concurrently (one per port plane), so a
+    period lasts ``n_slots = ceil(T / d_hat)`` timeslots.
+    """
+
+    perms: np.ndarray                 # (T, n) int64
+    d_hat: int = 1
+    recfg_frac: float = 0.0           # Delta_r: fraction of slot lost to reconfig
+    name: str = "schedule"
+    meta: dict = field(default_factory=dict)
+
+    @property
+    def T(self) -> int:
+        return int(self.perms.shape[0])
+
+    @property
+    def n(self) -> int:
+        return int(self.perms.shape[1])
+
+    @property
+    def n_slots(self) -> int:
+        return -(-self.T // self.d_hat)
+
+    def edge_counts(self) -> np.ndarray:
+        """(n, n) count of circuit appearances per period (self-loops kept)."""
+        c = np.zeros((self.n, self.n), dtype=np.int64)
+        idx = np.arange(self.n)
+        for p in self.perms:
+            c[idx, p] += 1
+        return c
+
+    def emulated_capacity(self, c: float = 1.0) -> np.ndarray:
+        """Time-averaged rate between every pair (self-loops dropped):
+        each appearance contributes c * (1 - recfg_frac) / n_slots."""
+        counts = self.edge_counts().astype(np.float64)
+        np.fill_diagonal(counts, 0.0)
+        return counts * (c * (1.0 - self.recfg_frac) / self.n_slots)
+
+    def capacity_per_slot(self, c: float = 1.0) -> np.ndarray:
+        """(n_slots, n, n) instantaneous capacity (bits per slot-time at
+        c=1 meaning one slot's worth). Used by the simulator."""
+        t, n = self.T, self.n
+        out = np.zeros((self.n_slots, n, n), dtype=np.float64)
+        idx = np.arange(n)
+        for s in range(self.n_slots):
+            for j in range(s * self.d_hat, min((s + 1) * self.d_hat, t)):
+                out[s, idx, self.perms[j]] += c * (1.0 - self.recfg_frac)
+        for s in range(self.n_slots):
+            np.fill_diagonal(out[s], 0.0)
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Vermilion — Algorithm 1
+# ---------------------------------------------------------------------------
+
+def _configuration_model(
+    x_out: np.ndarray, x_in: np.ndarray, rng: np.random.Generator
+) -> np.ndarray:
+    """Random directed multigraph with the given degree sequences (stubs
+    paired uniformly at random). Self-loops / multi-edges allowed, as in the
+    paper — they only waste capacity, never break the matchings."""
+    assert x_out.sum() == x_in.sum(), "unbalanced degree sequences"
+    n = len(x_out)
+    out_stubs = np.repeat(np.arange(n), x_out)
+    in_stubs = np.repeat(np.arange(n), x_in)
+    rng.shuffle(in_stubs)
+    e = np.zeros((n, n), dtype=np.int64)
+    np.add.at(e, (out_stubs, in_stubs), 1)
+    return e
+
+
+def vermilion_emulated_topology(
+    m: np.ndarray, k: int = 3, seed: int = 0, normalize: str = "hose"
+) -> np.ndarray:
+    """Algorithm 1, ``emulatedTopology``: the k*n-regular multigraph.
+
+    ``normalize``:
+      * ``"hose"`` — divide by the max row/col sum (Algorithm 1 verbatim;
+        what Theorem 3's adversarial analysis assumes). Default.
+      * ``"saturate"`` — Sinkhorn-project the estimate toward a saturated
+        doubly-stochastic matrix first (deployment option).  Real traffic
+        estimates are noisy and far from saturated; max-row normalization
+        lets one hot row crush every other node's allocation, while
+        saturating gives each node its full capacity share proportionally
+        to its *own* demand profile; tail FCTs improve dramatically
+        (EXPERIMENTS.md §Perf).  Note: Theorem 3's bound formally holds for
+        the matrix *as saturated*; if true demand is far from saturated the
+        per-entry guarantee can dip (use "hose" when the bound must hold
+        verbatim — the theory tests do).
+    """
+    m = np.asarray(m, dtype=np.float64)
+    n = m.shape[0]
+    if k < 2:
+        raise ValueError("k >= 2 (k-1 must be positive)")
+    rng = np.random.default_rng(seed)
+
+    # 1. normalize (max row/col sum <= 1), upscale, round
+    if normalize == "saturate":
+        norm = saturate(m)
+    elif normalize == "hose":
+        norm = hose_normalize(m)
+    else:
+        raise ValueError(normalize)
+    np.fill_diagonal(norm, 0.0)
+    r = round_matrix((k - 1) * n * norm)
+
+    # 2. traffic-aware multigraph + 3. oblivious residual (one edge per pair)
+    e = r + (1 - np.eye(n, dtype=np.int64))
+
+    # 4. pad to k*n-regularity with the configuration model
+    x_out = k * n - e.sum(axis=1)
+    x_in = k * n - e.sum(axis=0)
+    if (x_out < 0).any() or (x_in < 0).any():  # pragma: no cover
+        raise AssertionError("rounding exceeded degree budget")
+    e += _configuration_model(x_out, x_in, rng)
+    return e
+
+
+_PHI = (np.sqrt(5.0) - 1.0) / 2.0
+
+
+def spread_matchings(perms: np.ndarray) -> np.ndarray:
+    """Reorder matchings by a golden-ratio low-discrepancy sequence.
+
+    The Birkhoff-style decomposition emits identical hot matchings in
+    consecutive runs; executed in that order, a pair's circuits bunch up and
+    leave long gaps, inflating tail latency.  Sorting index i by
+    frac(i * phi) spreads any consecutive run nearly evenly over the period
+    (beyond-paper optimization; the paper leaves round-robin order free).
+    Emulated capacity is invariant to this reordering.
+    """
+    t = perms.shape[0]
+    return perms[np.argsort((np.arange(t) * _PHI) % 1.0, kind="stable")]
+
+
+def vermilion_schedule(
+    m: np.ndarray,
+    k: int = 3,
+    d_hat: int = 1,
+    recfg_frac: float = 0.0,
+    seed: int = 0,
+    spread: bool = True,
+    normalize: str = "hose",
+) -> Schedule:
+    """Algorithm 1, ``generateSchedule``: k*n perfect matchings, round-robin."""
+    e = vermilion_emulated_topology(m, k=k, seed=seed, normalize=normalize)
+    perms = decompose_matchings(e)
+    if spread:
+        perms = spread_matchings(perms)
+    return Schedule(
+        perms=perms,
+        d_hat=d_hat,
+        recfg_frac=recfg_frac,
+        name=f"vermilion-k{k}",
+        meta={"k": k, "seed": seed, "spread": spread, "normalize": normalize},
+    )
+
+
+# ---------------------------------------------------------------------------
+# Baselines
+# ---------------------------------------------------------------------------
+
+def oblivious_schedule(
+    n: int, d_hat: int = 1, recfg_frac: float = 0.0
+) -> Schedule:
+    """RotorNet/Sirius-style round-robin over the n-1 cyclic shifts,
+    emulating a uniform all-to-all mesh."""
+    shifts = np.arange(1, n)
+    perms = (np.arange(n)[None, :] + shifts[:, None]) % n
+    return Schedule(perms=perms, d_hat=d_hat, recfg_frac=recfg_frac,
+                    name="oblivious")
+
+
+def greedy_matching_schedule(
+    m: np.ndarray,
+    n_matchings: int | None = None,
+    d_hat: int = 1,
+    recfg_frac: float = 0.0,
+) -> Schedule:
+    """Negotiator-style: repeatedly pick the maximum-weight matching of the
+    residual demand. Served capacity per matching = one slot's share."""
+    m = hose_normalize(np.asarray(m, dtype=np.float64))
+    n = m.shape[0]
+    t = n_matchings or n
+    resid = m.copy()
+    perms = np.empty((t, n), dtype=np.int64)
+    slot_cap = 1.0 / t  # each matching carries 1/t of the period's capacity
+    for i in range(t):
+        row, col = linear_sum_assignment(resid, maximize=True)
+        perms[i] = col[np.argsort(row)]
+        resid[row, col] = np.maximum(resid[row, col] - slot_cap, 0.0)
+    return Schedule(perms=perms, d_hat=d_hat, recfg_frac=recfg_frac,
+                    name="greedy")
+
+
+def bvn_decompose(
+    m: np.ndarray, tol: float = 1e-9, max_terms: int | None = None
+) -> tuple[np.ndarray, np.ndarray]:
+    """Birkhoff-von Neumann: doubly-stochastic m = sum_i lam_i P_i.
+
+    Returns (lams, perms). Up to (n-1)^2 + 1 terms.
+    """
+    m = saturate(np.asarray(m, dtype=np.float64))
+    n = m.shape[0]
+    resid = m.copy()
+    lams, perms = [], []
+    cap = max_terms or (n * n)
+    while resid.max() > tol and len(lams) < cap:
+        support = (resid > tol).astype(np.int64)
+        # regular-ish support: perfect matching exists for doubly stochastic
+        perm = extract_perfect_matching(support * (n + 1))
+        lam = float(resid[np.arange(n), perm].min())
+        if lam <= tol:
+            break
+        lams.append(lam)
+        perms.append(perm)
+        resid[np.arange(n), perm] -= lam
+    return np.asarray(lams), np.asarray(perms, dtype=np.int64)
+
+
+def quantize_bvn(
+    lams: np.ndarray, perms: np.ndarray, n_slots: int,
+    d_hat: int = 1, recfg_frac: float = 0.0,
+) -> Schedule:
+    """Time-quantize a variable-duration BvN schedule into ``n_slots`` fixed
+    slots (Appendix A, Q5) — the paper's strawman. Small-lambda matchings are
+    dropped or inflated to one slot, which is exactly the duty-cycle loss
+    Vermilion's rounding avoids."""
+    w = lams / lams.sum()
+    slots = np.floor(w * n_slots).astype(np.int64)
+    # largest-remainder fill to exactly n_slots
+    rem = w * n_slots - slots
+    need = n_slots - slots.sum()
+    if need > 0:
+        slots[np.argsort(-rem)[:need]] += 1
+    keep = slots > 0
+    out = np.repeat(np.arange(len(lams))[keep], slots[keep])
+    return Schedule(perms=perms[out], d_hat=d_hat, recfg_frac=recfg_frac,
+                    name="bvn-quantized")
+
+
+def bvn_schedule(
+    m: np.ndarray, n_slots: int | None = None,
+    d_hat: int = 1, recfg_frac: float = 0.0,
+) -> Schedule:
+    lams, perms = bvn_decompose(m)
+    n = m.shape[0]
+    return quantize_bvn(lams, perms, n_slots or 3 * n,
+                        d_hat=d_hat, recfg_frac=recfg_frac)

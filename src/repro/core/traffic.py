@@ -1,0 +1,136 @@
+"""Traffic matrices for the hose model (Definition 1 of the paper).
+
+A traffic matrix is an (n, n) nonnegative array, entry (u, v) = demand from
+node u to node v in units of link capacity (c = 1 after normalization).
+The hose model requires every row sum and column sum <= d_hat (the node's
+in/out physical degree).
+
+All control-plane code is numpy (like the paper's control plane); the
+data-plane simulator has a JAX twin in :mod:`repro.core.simulator`.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = [
+    "hose_normalize",
+    "is_hose",
+    "saturate",
+    "uniform",
+    "ring",
+    "permutation",
+    "skewed",
+    "dlrm_data_parallel",
+    "dlrm_hybrid_parallel",
+    "random_hose",
+]
+
+
+def hose_normalize(m: np.ndarray, d_hat: float = 1.0) -> np.ndarray:
+    """Scale ``m`` so that max(row sum, col sum) == d_hat (paper Alg. 1 l.12).
+
+    Zero matrices are returned unchanged.
+    """
+    m = np.asarray(m, dtype=np.float64)
+    if m.min() < 0:
+        raise ValueError("traffic matrix must be nonnegative")
+    top = max(m.sum(axis=1).max(initial=0.0), m.sum(axis=0).max(initial=0.0))
+    if top <= 0:
+        return m.copy()
+    return m * (d_hat / top)
+
+
+def is_hose(m: np.ndarray, d_hat: float = 1.0, tol: float = 1e-9) -> bool:
+    m = np.asarray(m, dtype=np.float64)
+    return bool(
+        (m >= -tol).all()
+        and m.sum(axis=1).max(initial=0.0) <= d_hat + tol
+        and m.sum(axis=0).max(initial=0.0) <= d_hat + tol
+    )
+
+
+def saturate(m: np.ndarray, iters: int = 200) -> np.ndarray:
+    """Sinkhorn-project ``m`` toward a doubly stochastic (saturated) matrix.
+
+    Saturated hose matrices (all row/col sums == capacity) are the worst case
+    per Namyar et al.; Theorem 1's proof decomposes exactly these.
+    """
+    m = np.asarray(m, dtype=np.float64).copy()
+    if (m <= 0).all():
+        return m
+    m = np.where(m <= 0, 1e-12, m)
+    for _ in range(iters):
+        m /= m.sum(axis=1, keepdims=True)
+        m /= m.sum(axis=0, keepdims=True)
+    return m
+
+
+# ---------------------------------------------------------------------------
+# Canonical demand patterns used in the paper's evaluation (§4.2)
+# ---------------------------------------------------------------------------
+
+def uniform(n: int) -> np.ndarray:
+    """All-to-all uniform demand (the pattern oblivious designs emulate)."""
+    m = np.full((n, n), 1.0 / (n - 1))
+    np.fill_diagonal(m, 0.0)
+    return m
+
+
+def ring(n: int) -> np.ndarray:
+    """Ring permutation: the worst case for oblivious networks (§2.2)."""
+    m = np.zeros((n, n))
+    m[np.arange(n), (np.arange(n) + 1) % n] = 1.0
+    return m
+
+
+def permutation(n: int, seed: int = 0) -> np.ndarray:
+    """A random permutation demand matrix (saturated, maximally skewed)."""
+    rng = np.random.default_rng(seed)
+    p = rng.permutation(n)
+    # avoid fixed points (self-demand is meaningless)
+    for i in range(n):
+        if p[i] == i:
+            j = (i + 1) % n
+            p[i], p[j] = p[j], p[i]
+    m = np.zeros((n, n))
+    m[np.arange(n), p] = 1.0
+    return m
+
+
+def skewed(n: int, skew: float, seed: int = 0) -> np.ndarray:
+    """``skew``-weighted mix of a permutation and uniform (paper Fig 7)."""
+    if not 0.0 <= skew <= 1.0:
+        raise ValueError("skew in [0, 1]")
+    return skew * permutation(n, seed) + (1.0 - skew) * uniform(n)
+
+
+def dlrm_data_parallel(n: int) -> np.ndarray:
+    """DLRM data-parallel pattern (paper Fig 4a): ring all-reduce dominant
+    plus a light uniform all-to-all for embedding exchange."""
+    m = 0.75 * ring(n) + 0.25 * uniform(n)
+    return hose_normalize(m)
+
+
+def dlrm_hybrid_parallel(n: int, groups: int = 4) -> np.ndarray:
+    """Hybrid parallelism: dense all-to-all within groups (model parallel)
+    plus a ring across group leaders (data parallel)."""
+    assert n % groups == 0
+    g = n // groups
+    m = np.zeros((n, n))
+    for b in range(groups):
+        s = slice(b * g, (b + 1) * g)
+        blk = np.full((g, g), 1.0 / max(g - 1, 1))
+        np.fill_diagonal(blk, 0.0)
+        m[s, s] = blk
+    leaders = np.arange(0, n, g)
+    for i, u in enumerate(leaders):
+        m[u, leaders[(i + 1) % groups]] += 1.0
+    return hose_normalize(m)
+
+
+def random_hose(n: int, seed: int = 0, density: float = 0.5) -> np.ndarray:
+    """Random nonnegative matrix, hose-normalized. Used by property tests."""
+    rng = np.random.default_rng(seed)
+    m = rng.gamma(0.5, 1.0, size=(n, n)) * (rng.random((n, n)) < density)
+    np.fill_diagonal(m, 0.0)
+    return hose_normalize(m)

@@ -1,0 +1,100 @@
+"""Pallas TPU kernel: flash-decode (one query step against a long KV cache).
+
+Split-K over cache blocks: grid (B * KV_heads, num_k_blocks); the k-block
+axis is innermost and sequential on TPU, so the per-program scratch carries
+the running (max, sum, acc) across cache blocks — memory-bound streaming of
+the cache at HBM bandwidth, which is the decode_32k / long_500k hot spot.
+All `rep` query heads of one KV head are processed together as the MXU's
+M dimension (rep x dh tiles).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLK_K = 512
+NEG_INF = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, scale: float, blk_k: int):
+    kj = pl.program_id(1)
+    nk = pl.num_programs(1)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[...].astype(jnp.float32) * scale          # (rep, dh)
+    k = k_ref[...].astype(jnp.float32)                  # (blk_k, dh)
+    v = v_ref[...].astype(jnp.float32)
+    length = len_ref[0]
+
+    s = q @ k.T                                         # (rep, blk_k)
+    k_pos = kj * blk_k + jax.lax.iota(jnp.int32, blk_k)
+    s = jnp.where((k_pos <= length)[None, :], s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur)
+    l_cur = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + p @ v
+    m_ref[...] = m_cur
+    l_ref[...] = l_cur
+
+    @pl.when(kj == nk - 1)
+    def _finish():
+        o_ref[...] = (acc_ref[...] /
+                      jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def decode_attention(
+    q: jax.Array,             # (B, 1, H, dh)   one new token
+    k: jax.Array,             # (B, S, KV, dh)  cache
+    v: jax.Array,
+    length: jax.Array,        # scalar int32: last valid cache index
+    blk_k: int = DEFAULT_BLK_K,
+    interpret: bool = True,
+) -> jax.Array:
+    b, sq, h, dh = q.shape
+    assert sq == 1, "decode kernel handles a single query step"
+    _, sk, kvh, _ = k.shape
+    rep = h // kvh
+    blk_k = min(blk_k, sk)
+    if sk % blk_k:
+        raise ValueError("cache length must divide blk_k")
+    scale = dh ** -0.5
+    grid = (b * kvh, sk // blk_k)
+    qh = q.reshape(b, kvh, rep, dh)
+    lvec = jnp.asarray(length, jnp.int32).reshape(1)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, blk_k=blk_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda g, kj: (0,)),
+            pl.BlockSpec((None, None, rep, dh),
+                         lambda g, kj: (g // kvh, g % kvh, 0, 0)),
+            pl.BlockSpec((None, blk_k, None, dh),
+                         lambda g, kj: (g // kvh, kj, g % kvh, 0)),
+            pl.BlockSpec((None, blk_k, None, dh),
+                         lambda g, kj: (g // kvh, kj, g % kvh, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, None, rep, dh),
+                               lambda g, kj: (g // kvh, g % kvh, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kvh, rep, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((rep, 1), jnp.float32),   # running max
+            pltpu.VMEM((rep, 1), jnp.float32),   # running sum
+            pltpu.VMEM((rep, dh), jnp.float32),  # accumulator
+        ],
+        interpret=interpret,
+    )(lvec, qh, k, v)
+    return out.reshape(b, 1, h, dh)

@@ -1,0 +1,17 @@
+"""Jit'd public entry for flash-decode."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .decode_attention import decode_attention
+from .ref import decode_attention_ref
+
+
+@partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def decode_attn(q, k, v, length, use_pallas: bool = False,
+                interpret: bool = True):
+    if use_pallas:
+        return decode_attention(q, k, v, length, interpret=interpret)
+    return decode_attention_ref(q, k, v, length)

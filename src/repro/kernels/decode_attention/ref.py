@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for flash-decode: single-step attention over a cache."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k, v, length):
+    """q: (B, 1, H, dh); k/v: (B, S, KV, dh); length: last valid index."""
+    b, _, h, dh = q.shape
+    _, sk, kvh, _ = k.shape
+    rep = h // kvh
+    kr = jnp.repeat(k, rep, axis=2)
+    vr = jnp.repeat(v, rep, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   kr.astype(jnp.float32)) * (dh ** -0.5)
+    mask = jnp.arange(sk)[None, None, None, :] <= length
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p,
+                      vr.astype(jnp.float32)).astype(q.dtype)

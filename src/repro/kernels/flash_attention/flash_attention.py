@@ -1,0 +1,99 @@
+"""Pallas TPU kernel: causal GQA flash attention (online softmax).
+
+Grid: (batch * q_heads, num_q_blocks) — outer dims parallel, inner q-block
+axis sequential per TPU core.  Each program holds one (BLK_Q, dh) query
+tile in VMEM and streams (BLK_K, dh) key/value tiles, maintaining the
+running (max, sum, acc) online-softmax state in VMEM scratch.  Block sizes
+are MXU-aligned (multiples of 128 on the contracting/lane dims).  GQA is
+handled by the BlockSpec index map: q head h reads kv head h // rep —
+repeated K/V are never materialized.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLK_Q = 128
+DEFAULT_BLK_K = 128
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, *, scale: float, causal: bool,
+            window: int, blk_k: int, sk: int, q_offset: int):
+    qi = pl.program_id(1)
+    q = q_ref[...].astype(jnp.float32) * scale          # (BLK_Q, dh)
+    blk_q = q.shape[0]
+    q_pos = q_offset + qi * blk_q + jax.lax.iota(jnp.int32, blk_q)
+
+    nk = sk // blk_k
+
+    def body(j, carry):
+        m_prev, l_prev, acc = carry
+        k = k_ref[pl.ds(j * blk_k, blk_k), :].astype(jnp.float32)
+        v = v_ref[pl.ds(j * blk_k, blk_k), :].astype(jnp.float32)
+        s = q @ k.T                                     # (BLK_Q, BLK_K)
+        k_pos = j * blk_k + jax.lax.iota(jnp.int32, blk_k)
+        mask = jnp.ones_like(s, dtype=jnp.bool_)
+        if causal:
+            mask &= q_pos[:, None] >= k_pos[None, :]
+        if window:
+            mask &= k_pos[None, :] > q_pos[:, None] - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur[:, None])
+        l_cur = l_prev * alpha + jnp.sum(p, axis=1)
+        acc = acc * alpha[:, None] + p @ v
+        return m_cur, l_cur, acc
+
+    m0 = jnp.full((blk_q,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((blk_q,), jnp.float32)
+    acc0 = jnp.zeros((blk_q, v_ref.shape[-1]), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, nk, body, (m0, l0, acc0))
+    o_ref[...] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jax.Array,             # (B, Sq, H, dh)
+    k: jax.Array,             # (B, Sk, KV, dh)
+    v: jax.Array,
+    causal: bool = True,
+    window: int = 0,
+    blk_q: int = DEFAULT_BLK_Q,
+    blk_k: int = DEFAULT_BLK_K,
+    interpret: bool = True,
+) -> jax.Array:
+    b, sq, h, dh = q.shape
+    _, sk, kvh, _ = k.shape
+    rep = h // kvh
+    blk_q = min(blk_q, sq)
+    blk_k = min(blk_k, sk)
+    if sq % blk_q or sk % blk_k:
+        raise ValueError("sequence lengths must divide block sizes")
+    scale = dh ** -0.5
+    q_offset = sk - sq   # align ends: q position i sits at sk - sq + i
+
+    grid = (b * h, sq // blk_q)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, causal=causal,
+                          window=window, blk_k=blk_k, sk=sk,
+                          q_offset=q_offset),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, blk_q, None, dh),
+                         lambda bh, qi: (bh // h, qi, bh % h, 0)),
+            pl.BlockSpec((None, sk, None, dh),
+                         lambda bh, qi: (bh // h, 0, (bh % h) // rep, 0)),
+            pl.BlockSpec((None, sk, None, dh),
+                         lambda bh, qi: (bh // h, 0, (bh % h) // rep, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, blk_q, None, dh),
+                               lambda bh, qi: (bh // h, qi, bh % h, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, sq, h, dh), q.dtype),
+        interpret=interpret,
+    )(q, k, v)
+    return out

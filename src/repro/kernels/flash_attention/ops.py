@@ -1,0 +1,19 @@
+"""Jit'd public entry: Pallas flash attention on TPU, jnp oracle elsewhere."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .flash_attention import flash_attention
+from .ref import attention_ref
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "use_pallas",
+                                   "interpret"))
+def attention(q, k, v, causal: bool = True, window: int = 0,
+              use_pallas: bool = False, interpret: bool = True):
+    if use_pallas:
+        return flash_attention(q, k, v, causal=causal, window=window,
+                               interpret=interpret)
+    return attention_ref(q, k, v, causal=causal, window=window)

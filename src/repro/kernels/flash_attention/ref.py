@@ -1,0 +1,28 @@
+"""Pure-jnp oracle: causal/windowed GQA attention (fp32 softmax)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import jax
+
+
+def attention_ref(q, k, v, causal: bool = True, window: int = 0):
+    """q: (B, Sq, H, dh); k/v: (B, Sk, KV, dh). Returns (B, Sq, H, dh)."""
+    b, sq, h, dh = q.shape
+    _, sk, kvh, _ = k.shape
+    rep = h // kvh
+    kr = jnp.repeat(k, rep, axis=2)
+    vr = jnp.repeat(v, rep, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   kr.astype(jnp.float32)) * (dh ** -0.5)
+    qp = jnp.arange(sq)[:, None] + (sk - sq)   # align ends (cache layout)
+    kp = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), dtype=bool)
+    if causal:
+        mask &= qp >= kp
+    if window:
+        mask &= kp > qp - window
+    s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, vr.astype(jnp.float32)
+                      ).astype(q.dtype)

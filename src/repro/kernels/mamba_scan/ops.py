@@ -1,0 +1,17 @@
+"""Jit'd public entry for the selective scan."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .mamba_scan import mamba_scan
+from .ref import mamba_scan_ref
+
+
+@partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def selective_scan(a_bar, b_bar, c, use_pallas: bool = False,
+                   interpret: bool = True):
+    if use_pallas:
+        return mamba_scan(a_bar, b_bar, c, interpret=interpret)
+    return mamba_scan_ref(a_bar, b_bar, c)

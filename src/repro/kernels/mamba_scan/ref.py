@@ -1,0 +1,22 @@
+"""Pure-jnp oracle: sequential selective scan."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mamba_scan_ref(a_bar, b_bar, c):
+    """a_bar/b_bar: (B, S, D, N); c: (B, S, N) -> y: (B, S, D)."""
+    def step(h, inp):
+        a, bu, ct = inp
+        h = a * h + bu
+        return h, jnp.einsum("bdn,bn->bd", h, ct)
+
+    b, s, d, n = a_bar.shape
+    h0 = jnp.zeros((b, d, n), jnp.float32)
+    _, ys = jax.lax.scan(
+        step, h0,
+        (a_bar.astype(jnp.float32).transpose(1, 0, 2, 3),
+         b_bar.astype(jnp.float32).transpose(1, 0, 2, 3),
+         c.astype(jnp.float32).transpose(1, 0, 2)))
+    return ys.transpose(1, 0, 2)

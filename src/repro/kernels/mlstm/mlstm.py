@@ -1,0 +1,117 @@
+"""Pallas TPU kernel: chunkwise-parallel mLSTM (xLSTM matrix memory).
+
+Grid: (B * H, num_chunks), chunk axis innermost/sequential.  Scratch holds
+the stabilized (C: dh x dh, n: dh, m: 1) recurrent state across chunks.
+Within a chunk: the (Q, Q) intra-chunk decay matrix and score matrix run on
+the MXU; the cross-chunk contribution is a (Q, dh) @ (dh, dh) matmul.
+Math matches models.xlstm.mlstm_chunkwise (same stabilizer g_t =
+max(m_prev, cummax(logi - F))); tests assert exact agreement with the
+pure-jnp oracle.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_CHUNK = 128
+NEG_BIG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, li_ref, lf_ref, o_ref,
+            c_ref, n_ref, m_ref, *, scale: float):
+    cj = pl.program_id(1)
+
+    @pl.when(cj == 0)
+    def _init():
+        c_ref[...] = jnp.zeros_like(c_ref)
+        n_ref[...] = jnp.zeros_like(n_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_BIG)
+
+    q = q_ref[...].astype(jnp.float32)          # (Q, dh)
+    k = k_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    li = li_ref[...].astype(jnp.float32)[:, 0]  # (Q,)
+    lf = lf_ref[...].astype(jnp.float32)[:, 0]
+
+    qn = q.shape[0]
+    fcum = jnp.cumsum(lf)                       # (Q,)
+    src = li - fcum
+    m_prev = m_ref[0, 0]
+    g = jnp.maximum(m_prev, jax.lax.cummax(src))
+    m_t = fcum + g
+
+    inter_c = jnp.exp(m_prev - g)               # (Q,)
+    dmat = src[None, :] - g[:, None]            # (Qt, Qu)
+    tri = jax.lax.broadcasted_iota(jnp.int32, (qn, qn), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (qn, qn), 1)
+    dstab = jnp.where(tri, jnp.exp(dmat), 0.0)
+    scores = (q @ k.T) * scale
+    w = scores * dstab
+    c_prev = c_ref[...]
+    n_prev = n_ref[...][:, 0]                   # (dh,)
+    num = w @ v + inter_c[:, None] * ((q * scale) @ c_prev)
+    den_intra = jnp.sum(w, axis=1)
+    den_inter = inter_c * ((q * scale) @ n_prev)
+    den = jnp.maximum(jnp.abs(den_intra + den_inter),
+                      jnp.exp(jnp.minimum(-m_t, 80.0)))
+    o_ref[...] = (num / (den[:, None] + 1e-6)).astype(o_ref.dtype)
+
+    # state update at stabilizer m_new = F_last + g_last
+    g_last = g[-1]
+    coeff = jnp.exp(src - g_last)               # (Q,)
+    decay = jnp.exp(m_prev - g_last)
+    c_ref[...] = decay * c_prev + (k * coeff[:, None]).T @ v
+    n_ref[...] = (decay * n_prev
+                  + jnp.sum(k * coeff[:, None], axis=0))[:, None]
+    m_ref[...] = (fcum[-1] + g_last).reshape(1, 1)
+
+
+def mlstm_chunkwise_pallas(
+    q: jax.Array,           # (B, S, H, dh)
+    k: jax.Array,
+    v: jax.Array,
+    logi: jax.Array,        # (B, S, H)
+    logf: jax.Array,        # (B, S, H) log-sigmoid forget gates
+    chunk: int = DEFAULT_CHUNK,
+    interpret: bool = True,
+) -> jax.Array:
+    b, s, h, dh = q.shape
+    chunk = min(chunk, s)
+    if s % chunk:
+        raise ValueError("sequence must divide chunk size")
+    scale = dh ** -0.5
+    grid = (b * h, s // chunk)
+    # gate tensors get a trailing unit dim so BlockSpecs stay 2D in-kernel
+    li = logi[..., None].transpose(0, 2, 1, 3)   # (B, H, S, 1)
+    lf = logf[..., None].transpose(0, 2, 1, 3)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, chunk, None, dh),
+                         lambda g, cj: (g // h, cj, g % h, 0)),
+            pl.BlockSpec((None, chunk, None, dh),
+                         lambda g, cj: (g // h, cj, g % h, 0)),
+            pl.BlockSpec((None, chunk, None, dh),
+                         lambda g, cj: (g // h, cj, g % h, 0)),
+            pl.BlockSpec((None, None, chunk, 1),
+                         lambda g, cj: (g // h, g % h, cj, 0)),
+            pl.BlockSpec((None, None, chunk, 1),
+                         lambda g, cj: (g // h, g % h, cj, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, chunk, None, dh),
+                               lambda g, cj: (g // h, cj, g % h, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, s, h, dh), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((dh, dh), jnp.float32),
+            pltpu.VMEM((dh, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, li, lf)
+    return out

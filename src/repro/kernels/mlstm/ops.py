@@ -1,0 +1,18 @@
+"""Jit'd public entry for chunkwise mLSTM."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .mlstm import mlstm_chunkwise_pallas
+from .ref import mlstm_ref
+
+
+@partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def mlstm(q, k, v, logi, logf, use_pallas: bool = False,
+          interpret: bool = True):
+    if use_pallas:
+        return mlstm_chunkwise_pallas(q, k, v, logi, logf,
+                                      interpret=interpret)
+    return mlstm_ref(q, k, v, logi, logf)

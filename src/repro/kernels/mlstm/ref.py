@@ -1,0 +1,7 @@
+"""Pure-jnp oracle: re-exports the model's chunkwise/parallel mLSTM."""
+from repro.models.xlstm import mlstm_chunkwise, mlstm_parallel
+
+
+def mlstm_ref(q, k, v, logi, logf):
+    out, _ = mlstm_chunkwise(q, k, v, logi, logf)
+    return out

@@ -1,0 +1,17 @@
+"""Jit'd public entry: Pallas on TPU, jnp reference elsewhere."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .ref import sinkhorn_ref
+from .sinkhorn import sinkhorn_pallas
+
+
+@partial(jax.jit, static_argnames=("iters", "use_pallas", "interpret"))
+def sinkhorn(m, iters: int = 20, use_pallas: bool = False,
+             interpret: bool = True):
+    if use_pallas:
+        return sinkhorn_pallas(m, iters=iters, interpret=interpret)
+    return sinkhorn_ref(m, iters=iters)

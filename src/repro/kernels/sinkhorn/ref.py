@@ -1,0 +1,18 @@
+"""Pure-jnp oracle: Sinkhorn projection to a doubly-stochastic matrix.
+
+The control-plane hot spot of Vermilion's deployment mode: EWMA traffic
+estimates are projected toward saturation before matrix rounding
+(core/schedule.vermilion_emulated_topology(normalize="saturate")).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def sinkhorn_ref(m: jnp.ndarray, iters: int = 20,
+                 eps: float = 1e-12) -> jnp.ndarray:
+    m = jnp.maximum(m.astype(jnp.float32), eps)
+    for _ in range(iters):
+        m = m / jnp.sum(m, axis=1, keepdims=True)
+        m = m / jnp.sum(m, axis=0, keepdims=True)
+    return m

@@ -1,0 +1,47 @@
+"""ShapeDtypeStruct stand-ins for every (arch x shape) dry-run cell —
+weak-type-correct, shardable, zero allocation."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import SHAPES, get_config
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(x) for x in shape), dtype)
+
+
+def input_specs(arch: str, shape_name: str) -> dict:
+    """Model inputs for one cell. For ``train``/``prefill``: the batch dict.
+    For ``decode``: tokens only (cache specs come from ``cache_structs``)."""
+    cfg = get_config(arch)
+    sh = SHAPES[shape_name]
+    b, s = sh.global_batch, sh.seq_len
+    if sh.kind == "train":
+        batch = {
+            "tokens": sds((b, s), jnp.int32),
+            "labels": sds((b, s), jnp.int32),
+        }
+    elif sh.kind == "prefill":
+        batch = {"tokens": sds((b, s), jnp.int32)}
+    else:  # decode: one new token against a cache of length s
+        batch = {"tokens": sds((b, 1), jnp.int32)}
+    if cfg.family == "vlm" and sh.kind != "decode":
+        batch["vision_embeds"] = sds((b, cfg.n_vision_tokens, cfg.d_model),
+                                     jnp.float32)
+    if cfg.is_encdec and sh.kind != "decode":
+        batch["frames"] = sds((b, cfg.enc_seq, cfg.d_model), jnp.float32)
+    return batch
+
+
+def cache_structs(cfg, batch: int, max_len: int):
+    """ShapeDtypeStruct pytree mirroring models.init_cache."""
+    from ..models.transformer import init_cache
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_len))
+
+
+def param_structs(cfg):
+    from ..models import init_params
+    return jax.eval_shape(
+        lambda: init_params(jax.random.PRNGKey(0), cfg))

@@ -1,0 +1,21 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state.  The single-pod mesh is 16x16 = 256 chips
+(one TPU v5e pod); multi-pod adds a leading ``pod`` axis (2 pods = 512
+chips) — the axis whose traffic Vermilion's optical interconnect carries.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over however many (fake) devices exist — tests/examples."""
+    return jax.make_mesh((data, model), ("data", "model"))

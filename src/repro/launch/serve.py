@@ -1,0 +1,40 @@
+"""Serving launcher: continuous-batching engine over a request file/stdin.
+
+    python -m repro.launch.serve --arch qwen1.5-0.5b --smoke --n-requests 6
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from ..configs import get_config
+from ..models import init_params
+from ..serve.engine import Request, ServeEngine
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--n-requests", type=int, default=6)
+    ap.add_argument("--lanes", type=int, default=2)
+    ap.add_argument("--max-new-tokens", type=int, default=8)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    eng = ServeEngine(params, cfg, n_lanes=args.lanes, max_len=96)
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(1, cfg.vocab, size=rng.integers(4, 16)),
+                    max_new_tokens=args.max_new_tokens)
+            for i in range(args.n_requests)]
+    done = eng.run(reqs)
+    for r in sorted(done, key=lambda r: r.rid):
+        print(f"req {r.rid}: {len(r.prompt)} prompt toks -> {r.out_tokens}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+"""Model zoo: one composable decoder LM covering all assigned families."""
+from . import layers, mamba, moe, model, transformer, xlstm
+from .model import (
+    decode_step,
+    greedy_generate,
+    init_params,
+    loss_fn,
+    prefill,
+)

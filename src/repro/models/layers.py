@@ -1,0 +1,272 @@
+"""Shared model layers: norms, RoPE, chunked attention, GQA/MLA, SwiGLU.
+
+Everything is pure-functional over param pytrees (dicts).  Attention scores
+are computed in query blocks (flash-style, never materializing S x S), which
+is both the CPU/jnp reference semantics and the structure the Pallas kernels
+implement on TPU (kernels/flash_attention).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+Init = jax.nn.initializers
+
+
+def _dense_init(key, shape, dtype):
+    return Init.truncated_normal(stddev=0.02)(key, shape, dtype)
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * scale).astype(dt)
+
+
+def init_rms_norm(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float = 1e4) -> jax.Array:
+    """x: (..., S, H, dh); positions: (..., S)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., :, None, :]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Chunked (flash-style) attention — jnp reference semantics
+# ---------------------------------------------------------------------------
+
+def chunked_attention(
+    q: jax.Array,            # (B, Sq, H, dh)
+    k: jax.Array,            # (B, Sk, KV, dh)
+    v: jax.Array,            # (B, Sk, KV, dh)
+    causal: bool = True,
+    window: int = 0,         # sliding window (0 = full)
+    block_q: int = 512,
+    q_offset: jax.Array | int = 0,   # absolute position of q[0] (decode)
+) -> jax.Array:
+    """GQA attention over query blocks; scores are (B, H, blk, Sk) at most.
+    Softmax in fp32. Returns (B, Sq, H, dh)."""
+    b, sq, h, dh = q.shape
+    _, sk, kvh, _ = k.shape
+    dv = v.shape[-1]           # may differ from dh (MLA: q/k wider than v)
+    rep = h // kvh
+    scale = dh ** -0.5
+    k_pos = jnp.arange(sk)
+
+    blk = min(block_q, sq)
+    pad = (-sq) % blk
+    qp = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nblk = qp.shape[1] // blk
+    # grouped layout: never materialize repeated K/V (GQA memory saving)
+    qb = qp.reshape(b, nblk, blk, kvh, rep, dh)
+
+    def one_block(carry, inp):
+        qi, q0 = inp                               # (B, blk, KV, rep, dh)
+        s = jnp.einsum("bqgrd,bkgd->bgrqk", qi.astype(jnp.float32),
+                       k.astype(jnp.float32)) * scale
+        q_pos = q0 + jnp.arange(blk) + q_offset
+        mask = jnp.ones((blk, sk), dtype=bool)
+        if causal:
+            mask &= q_pos[:, None] >= k_pos[None, :]
+        if window:
+            mask &= k_pos[None, :] > q_pos[:, None] - window
+        s = jnp.where(mask[None, None, None], s, -jnp.inf)
+        p = jax.nn.softmax(s, axis=-1)
+        p = jnp.where(jnp.isnan(p), 0.0, p)        # fully-masked rows
+        o = jnp.einsum("bgrqk,bkgd->bqgrd", p, v.astype(jnp.float32))
+        return carry, o.astype(q.dtype)
+
+    starts = jnp.arange(nblk) * blk
+    _, ob = jax.lax.scan(one_block, None,
+                         (qb.transpose(1, 0, 2, 3, 4, 5), starts))
+    out = ob.transpose(1, 0, 2, 3, 4, 5).reshape(b, nblk * blk, h, dv)
+    return out[:, :sq]
+
+
+# ---------------------------------------------------------------------------
+# GQA attention block
+# ---------------------------------------------------------------------------
+
+def init_gqa(key, cfg, dtype=jnp.float32) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": _dense_init(ks[0], (d, h * hd), dtype),
+        "wk": _dense_init(ks[1], (d, kv * hd), dtype),
+        "wv": _dense_init(ks[2], (d, kv * hd), dtype),
+        "wo": _dense_init(ks[3], (h * hd, d), dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), dtype)
+        p["bk"] = jnp.zeros((kv * hd,), dtype)
+        p["bv"] = jnp.zeros((kv * hd,), dtype)
+    return p
+
+
+def gqa_qkv(p: dict, x: jax.Array, cfg) -> tuple[jax.Array, jax.Array, jax.Array]:
+    b, s, _ = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = x @ p["wq"].astype(x.dtype)
+    k = x @ p["wk"].astype(x.dtype)
+    v = x @ p["wv"].astype(x.dtype)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    return (q.reshape(b, s, h, hd), k.reshape(b, s, kv, hd),
+            v.reshape(b, s, kv, hd))
+
+
+def gqa_attention(
+    p: dict, x: jax.Array, cfg, positions: jax.Array,
+    kv_cache: tuple | None = None, causal: bool = True,
+    cross_kv: tuple | None = None,
+) -> tuple[jax.Array, tuple | None]:
+    """Full GQA block. With ``kv_cache=(k, v, length)`` runs one decode step
+    (x is (B, 1, d)); returns updated cache.  ``cross_kv=(k, v)`` switches to
+    cross-attention (no cache update, no causal mask)."""
+    b, s, _ = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    q, k, v = gqa_qkv(p, x, cfg)
+    new_cache = None
+    if cross_kv is not None:
+        # cross-attention: keys/values from the encoder output (B, Se, d)
+        se = cross_kv.shape[1]
+        kvh = cfg.n_kv_heads
+        k = (cross_kv.astype(x.dtype) @ p["wk"].astype(x.dtype)).reshape(
+            b, se, kvh, hd)
+        v = (cross_kv.astype(x.dtype) @ p["wv"].astype(x.dtype)).reshape(
+            b, se, kvh, hd)
+        o = chunked_attention(q, k, v, causal=False, block_q=cfg.attn_block_q)
+    elif kv_cache is not None:
+        ck, cv, ln = kv_cache
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+        ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype), ln, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype), ln, axis=1)
+        # mask future cache positions via causal mask with q_offset = ln
+        o = chunked_attention(q, ck, cv, causal=True, window=cfg.sliding_window,
+                              block_q=cfg.attn_block_q, q_offset=ln)
+        new_cache = (ck, cv, ln + s)
+    else:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+        o = chunked_attention(q, k, v, causal=causal,
+                              window=cfg.sliding_window,
+                              block_q=cfg.attn_block_q)
+    o = o.reshape(b, s, h * hd) @ p["wo"].astype(x.dtype)
+    return o, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (multi-head latent attention, MiniCPM3/DeepSeek-V2 style)
+# ---------------------------------------------------------------------------
+
+def init_mla(key, cfg, dtype=jnp.float32) -> dict:
+    d, h, hd = cfg.d_model, cfg.n_heads, cfg.head_dim
+    rq = cfg.q_lora_rank or d
+    rkv = cfg.kv_lora_rank
+    rd = cfg.rope_head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "w_dq": _dense_init(ks[0], (d, rq), dtype),
+        "w_uq": _dense_init(ks[1], (rq, h * (hd + rd)), dtype),
+        "w_dkv": _dense_init(ks[2], (d, rkv), dtype),
+        "w_ukv": _dense_init(ks[3], (rkv, h * (hd + hd)), dtype),
+        "w_kr": _dense_init(ks[4], (d, rd), dtype),
+        "wo": _dense_init(ks[5], (h * hd, d), dtype),
+    }
+
+
+def mla_attention(
+    p: dict, x: jax.Array, cfg, positions: jax.Array,
+    kv_cache: tuple | None = None, causal: bool = True,
+) -> tuple[jax.Array, tuple | None]:
+    """Latent attention: caches the compressed c_kv (rkv) + rope key (rd)
+    instead of full K/V — MLA's serving advantage.
+    cache = (c_kv: (B, S, rkv), k_rope: (B, S, rd), length)."""
+    b, s, _ = x.shape
+    h, hd, rd = cfg.n_heads, cfg.head_dim, cfg.rope_head_dim
+    rkv = cfg.kv_lora_rank
+
+    cq = x @ p["w_dq"].astype(x.dtype)
+    q = (cq @ p["w_uq"].astype(x.dtype)).reshape(b, s, h, hd + rd)
+    q_nope, q_rope = q[..., :hd], q[..., hd:]
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+
+    c_kv = x @ p["w_dkv"].astype(x.dtype)          # (B, S, rkv)
+    k_rope_new = rope((x @ p["w_kr"].astype(x.dtype))[:, :, None, :],
+                      positions, cfg.rope_theta)[:, :, 0, :]  # (B, S, rd)
+
+    if kv_cache is not None:
+        cc, ckr, ln = kv_cache
+        cc = jax.lax.dynamic_update_slice_in_dim(cc, c_kv.astype(cc.dtype), ln, axis=1)
+        ckr = jax.lax.dynamic_update_slice_in_dim(ckr, k_rope_new.astype(ckr.dtype), ln, axis=1)
+        new_cache = (cc, ckr, ln + s)
+        # --- weight-absorbed decode (MLA's serving path): attend over the
+        # latent cache directly; never up-project K/V for all positions.
+        w_ukv = p["w_ukv"].astype(x.dtype).reshape(rkv, h, 2 * hd)
+        w_uk, w_uv = w_ukv[..., :hd], w_ukv[..., hd:]
+        q_lat = jnp.einsum("bshd,rhd->bshr", q_nope, w_uk)  # (B,s,h,rkv)
+        sc = (jnp.einsum("bshr,bkr->bhsk", q_lat.astype(jnp.float32),
+                         cc.astype(jnp.float32))
+              + jnp.einsum("bshd,bkd->bhsk", q_rope.astype(jnp.float32),
+                           ckr.astype(jnp.float32))) * ((hd + rd) ** -0.5)
+        k_pos = jnp.arange(cc.shape[1])
+        q_pos = ln + jnp.arange(s)
+        mask = q_pos[:, None] >= k_pos[None, :]
+        sc = jnp.where(mask[None, None], sc, -jnp.inf)
+        w = jax.nn.softmax(sc, axis=-1)
+        ctx = jnp.einsum("bhsk,bkr->bshr", w, cc.astype(jnp.float32))
+        o = jnp.einsum("bshr,rhd->bshd", ctx.astype(x.dtype), w_uv)
+        o = o.reshape(b, s, h * hd) @ p["wo"].astype(x.dtype)
+        return o, new_cache
+
+    kv = (c_kv @ p["w_ukv"].astype(x.dtype)).reshape(b, -1, h, 2 * hd)
+    k_nope, v = kv[..., :hd], kv[..., hd:]
+    k_full = jnp.concatenate(
+        [k_nope,
+         jnp.broadcast_to(k_rope_new.astype(x.dtype)[:, :, None, :],
+                          k_nope.shape[:3] + (rd,))], axis=-1)
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    o = chunked_attention(q_full, k_full, v, causal=causal,
+                          block_q=cfg.attn_block_q)
+    o = o.reshape(b, s, h * hd) @ p["wo"].astype(x.dtype)
+    return o, None
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU FFN
+# ---------------------------------------------------------------------------
+
+def init_ffn(key, d: int, ff: int, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": _dense_init(ks[0], (d, ff), dtype),
+        "w_in": _dense_init(ks[1], (d, ff), dtype),
+        "w_out": _dense_init(ks[2], (ff, d), dtype),
+    }
+
+
+def ffn(p: dict, x: jax.Array) -> jax.Array:
+    g = jax.nn.silu(x @ p["w_gate"].astype(x.dtype))
+    h = x @ p["w_in"].astype(x.dtype)
+    return (g * h) @ p["w_out"].astype(x.dtype)

@@ -1,0 +1,141 @@
+"""Mamba (S6) block: selective state-space scan, chunked.
+
+Training path scans over sequence chunks (``lax.scan`` carrying the SSM
+state across chunks, ``associative_scan`` within a chunk) so the
+(B, S, d_inner, d_state) discretized tensors are never materialized for the
+full sequence — the same blocking the Pallas kernel (kernels/mamba_scan)
+uses on TPU.  Decode keeps an explicit (d_inner, d_state) recurrent state
+and a (d_conv-1)-tap conv buffer — O(1) per token, which is what makes
+Jamba's ``long_500k`` cell runnable.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import _dense_init
+
+CHUNK = 256
+
+
+def init_mamba(key, cfg, dtype=jnp.float32) -> dict:
+    d = cfg.d_model
+    di = cfg.mamba_expand * d
+    n = cfg.d_state
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": _dense_init(ks[0], (d, 2 * di), dtype),
+        "conv_w": _dense_init(ks[1], (cfg.d_conv, di), dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": _dense_init(ks[2], (di, 2 * n + 1), dtype),
+        "dt_bias": jnp.full((1,), 0.5, dtype),
+        "a_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, n + 1, dtype=jnp.float32), (di, n)).copy()).astype(dtype),
+        "d_skip": jnp.ones((di,), dtype),
+        "out_proj": _dense_init(ks[3], (di, d), dtype),
+    }
+
+
+def _causal_conv(u: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """u: (B, S, di); w: (K, di) depthwise causal conv."""
+    k = w.shape[0]
+    up = jnp.pad(u, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(up[:, i:i + u.shape[1], :] * w[i] for i in range(k))
+    return out + b
+
+
+def _chunked_selective_scan(
+    a_bar: jax.Array, b_bar: jax.Array, h0: jax.Array, chunk: int
+) -> tuple[jax.Array, jax.Array]:
+    """h_t = a_t * h_{t-1} + b_t over axis 1, chunked.
+
+    a_bar/b_bar: (B, S, di, n) logically — passed as (B, S, ...) arrays that
+    we reshape to (B, nc, Q, ...). Returns (hs, h_last).
+    """
+    b, s = a_bar.shape[:2]
+    q = min(chunk, s)
+    pad = (-s) % q
+    if pad:
+        a_bar = jnp.pad(a_bar, ((0, 0), (0, pad)) + ((0, 0),) * (a_bar.ndim - 2),
+                        constant_values=1.0)
+        b_bar = jnp.pad(b_bar, ((0, 0), (0, pad)) + ((0, 0),) * (b_bar.ndim - 2))
+    nc = a_bar.shape[1] // q
+    ar = a_bar.reshape((b, nc, q) + a_bar.shape[2:]).transpose(1, 0, 2, 3, 4)
+    br = b_bar.reshape((b, nc, q) + b_bar.shape[2:]).transpose(1, 0, 2, 3, 4)
+
+    def combine(e1, e2):
+        (a1, b1), (a2, b2) = e1, e2
+        return a1 * a2, a2 * b1 + b2
+
+    def step(h, inp):
+        ac, bc = inp                                 # (B, Q, di, n)
+        bc = bc.at[:, 0].add(ac[:, 0] * h)
+        _, hs = jax.lax.associative_scan(combine, (ac, bc), axis=1)
+        return hs[:, -1], hs
+
+    h_last, hs = jax.lax.scan(step, h0, (ar, br))
+    hs = hs.transpose(1, 0, 2, 3, 4).reshape((b, nc * q) + a_bar.shape[2:])
+    return hs[:, :s], h_last
+
+
+def mamba_block(
+    p: dict, x: jax.Array, cfg, state: tuple | None = None
+) -> tuple[jax.Array, tuple | None]:
+    """x: (B, S, d). ``state=(ssm_state (B,di,n), conv_buf (B,K-1,di))`` for
+    single-step decode (S must be 1)."""
+    b, s, d = x.shape
+    n = cfg.d_state
+
+    xz = x @ p["in_proj"].astype(x.dtype)
+    u, z = jnp.split(xz, 2, axis=-1)                 # (B, S, di)
+
+    new_state = None
+    if state is not None:
+        ssm, conv_buf = state
+        kk = p["conv_w"].shape[0]
+        upad = jnp.concatenate([conv_buf.astype(x.dtype), u], axis=1)
+        w = p["conv_w"].astype(x.dtype)
+        uc = sum(upad[:, i:i + s, :] * w[i] for i in range(kk))
+        uc = uc + p["conv_b"].astype(x.dtype)
+        new_conv = upad[:, -(kk - 1):]
+    else:
+        uc = _causal_conv(u, p["conv_w"].astype(x.dtype),
+                          p["conv_b"].astype(x.dtype))
+    uc = jax.nn.silu(uc)
+
+    proj = uc @ p["x_proj"].astype(x.dtype)          # (B, S, 2n+1)
+    bmat, cmat, dt = proj[..., :n], proj[..., n:2 * n], proj[..., 2 * n:]
+    dt = jax.nn.softplus(dt + p["dt_bias"].astype(x.dtype))   # (B, S, 1)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))     # (di, n)
+
+    dtf = dt.astype(jnp.float32)
+    a_bar = jnp.exp(dtf[..., None] * a[None, None])  # (B, S, di, n)
+    b_bar = (dtf[..., None] * bmat.astype(jnp.float32)[:, :, None, :]
+             * uc.astype(jnp.float32)[..., None])
+
+    if state is not None:
+        if s == 1:
+            h_last = a_bar[:, 0] * ssm.astype(jnp.float32) + b_bar[:, 0]
+            hs = h_last[:, None]
+        else:  # prefill with carried state
+            hs, h_last = _chunked_selective_scan(
+                a_bar, b_bar, ssm.astype(jnp.float32), CHUNK)
+        new_state = (h_last.astype(ssm.dtype), new_conv)
+    else:
+        hs, _ = _chunked_selective_scan(
+            a_bar, b_bar, jnp.zeros(a_bar.shape[:1] + a_bar.shape[2:],
+                                    jnp.float32), CHUNK)
+
+    y = jnp.einsum("bsdn,bsn->bsd", hs, cmat.astype(jnp.float32))
+    y = y.astype(x.dtype) + uc * p["d_skip"].astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = y @ p["out_proj"].astype(x.dtype)
+    return out, new_state
+
+
+def init_mamba_state(cfg, batch: int, dtype=jnp.float32) -> tuple:
+    di = cfg.mamba_expand * cfg.d_model
+    return (
+        jnp.zeros((batch, di, cfg.d_state), dtype),
+        jnp.zeros((batch, cfg.d_conv - 1, di), dtype),
+    )

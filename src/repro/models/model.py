@@ -1,0 +1,67 @@
+"""High-level model API: init / loss / decode, uniform across families."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import transformer as T
+
+
+def init_params(key, cfg):
+    return T.init_params(key, cfg)
+
+
+def loss_fn(params, cfg, batch) -> tuple[jax.Array, dict]:
+    """batch: dict with ``tokens`` (B, S) int32, ``labels`` (B, S) int32
+    (-100 = masked), optional ``vision_embeds`` / ``frames``."""
+    h, aux = T.forward(
+        params, cfg, batch["tokens"],
+        vision_embeds=batch.get("vision_embeds"),
+        frames=batch.get("frames"),
+    )
+    labels = batch["labels"]
+    if cfg.family == "vlm" and "vision_embeds" in batch:
+        nv = batch["vision_embeds"].shape[1]
+        pad = jnp.full(labels.shape[:1] + (nv,), -100, labels.dtype)
+        labels = jnp.concatenate([pad, labels], axis=1)
+    mask = (labels >= 0).astype(jnp.float32)
+    labels = jnp.maximum(labels, 0)
+    ce = T.chunked_softmax_xent(params, cfg, h, labels, mask)
+    loss = ce + 0.01 * aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+def prefill(params, cfg, tokens, max_len: int, frames=None):
+    """Run the prompt through the model, filling caches.
+    Returns (logits_last (B, V), caches, length, cross_kv)."""
+    b, s = tokens.shape
+    caches = T.init_cache(cfg, b, max_len)
+    cross_kv = T.encode(params, cfg, frames) if cfg.is_encdec else None
+    x = T.embed_tokens(params, cfg, tokens)
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    withlen = T._attach_length(caches, cfg, jnp.int32(0))
+    x, new_caches, _ = T._run_cells(params, x, cfg, positions,
+                                    caches=withlen, cross_kv=cross_kv)
+    new_caches = T._detach_length(new_caches, cfg)
+    h = T.rms_norm_final(params, cfg, x)
+    logits = T.logits_fn(params, cfg, h[:, -1:])[:, -1]
+    return logits, new_caches, jnp.int32(s), cross_kv
+
+
+def decode_step(params, cfg, tokens, caches, length, cross_kv=None):
+    return T.decode_step(params, cfg, tokens, caches, length,
+                         cross_kv=cross_kv)
+
+
+def greedy_generate(params, cfg, prompt, steps: int, max_len: int):
+    """Tiny autoregressive driver used by tests/examples (CPU-sized)."""
+    logits, caches, length, cross = prefill(params, cfg, prompt, max_len)
+    tok = jnp.argmax(logits, axis=-1)[:, None]
+    out = [tok]
+    for _ in range(steps - 1):
+        logits, caches = decode_step(params, cfg, tok, caches, length,
+                                     cross_kv=cross)
+        length = length + 1
+        tok = jnp.argmax(logits, axis=-1)[:, None]
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)

@@ -1,0 +1,87 @@
+"""Mixture-of-Experts FFN with grouped, capacity-bounded einsum dispatch
+(GShard/Switch style, GSPMD-friendly).
+
+Tokens are reshaped into G groups of ~2048 tokens; capacity is per group
+(C = cf * k * T_g / E), so the dispatch tensor is (G, T_g, E, C) —
+G * T_g^2 * k * cf elements, *linear* in total tokens — and the group axis
+shards over the data axes.  Expert weights are stacked (E, d, ff) so expert
+parallelism is a plain sharding of the leading axis; the dispatch einsums
+lower to all-to-alls under pjit when tokens and experts live on different
+mesh axes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import _dense_init
+
+GROUP_TOKENS = 2048
+
+
+def init_moe(key, cfg, dtype=jnp.float32) -> dict:
+    d, ff, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    return {
+        "router": _dense_init(ks[0], (d, e), dtype),
+        "w_gate": _dense_init(ks[1], (e, d, ff), dtype),
+        "w_in": _dense_init(ks[2], (e, d, ff), dtype),
+        "w_out": _dense_init(ks[3], (e, ff, d), dtype),
+    }
+
+
+def _num_groups(t: int) -> int:
+    g = max(1, t // GROUP_TOKENS)
+    while t % g:
+        g -= 1
+    return g
+
+
+def moe_ffn(p: dict, x: jax.Array, cfg) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (out, aux_loss). Tokens over per-group capacity are
+    dropped (standard Switch/GShard semantics)."""
+    b, s, d = x.shape
+    e, top_k = cfg.n_experts, max(cfg.top_k, 1)
+    t = b * s
+    g = _num_groups(t)
+    tg = t // g
+    xt = x.reshape(g, tg, d)
+
+    logits = (xt @ p["router"].astype(x.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                      # (G, Tg, E)
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)            # (G, Tg, k)
+    gate_vals = gate_vals / jnp.clip(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    cap = int(max(1, cfg.capacity_factor * top_k * tg / e))
+
+    # position of each (token, k) assignment within its expert's capacity
+    onehot = jax.nn.one_hot(gate_idx, e, dtype=jnp.int32)        # (G, Tg, k, E)
+    flat = onehot.reshape(g, tg * top_k, e)
+    pos = jnp.cumsum(flat, axis=1) - flat                        # (G, Tg*k, E)
+    pos = (pos * flat).sum(-1).reshape(g, tg, top_k)             # (G, Tg, k)
+    keep = pos < cap
+
+    disp = (
+        jax.nn.one_hot(gate_idx, e, dtype=x.dtype)[..., None]
+        * jax.nn.one_hot(jnp.where(keep, pos, cap), cap + 1,
+                         dtype=x.dtype)[..., None, :]
+    )[..., :cap]                                                  # (G,Tg,k,E,C)
+    dispatch = disp.sum(2)                                        # (G, Tg, E, C)
+    combine = (disp * gate_vals[..., None, None].astype(x.dtype)).sum(2)
+
+    expert_in = jnp.einsum("gtec,gtd->egcd", dispatch, xt)
+    gate = jax.nn.silu(jnp.einsum("egcd,edf->egcf", expert_in,
+                                  p["w_gate"].astype(x.dtype)))
+    hid = jnp.einsum("egcd,edf->egcf", expert_in, p["w_in"].astype(x.dtype))
+    expert_out = jnp.einsum("egcf,efd->egcd", gate * hid,
+                            p["w_out"].astype(x.dtype))
+    out = jnp.einsum("gtec,egcd->gtd", combine, expert_out)
+
+    # load-balancing aux loss (Switch): E * mean_g sum_e f_e * p_e
+    frac_tokens = dispatch.sum((1, 3)) / jnp.maximum(
+        dispatch.sum((1, 2, 3), keepdims=False)[:, None], 1e-9)  # (G, E)
+    frac_probs = probs.mean(1)                                   # (G, E)
+    aux = e * jnp.mean(
+        jnp.sum(frac_tokens.astype(jnp.float32) * frac_probs, axis=-1))
+    return out.reshape(b, s, d), aux

@@ -1,0 +1,352 @@
+"""Composable decoder LM covering all assigned families.
+
+Layers are grouped into repeating *supercells* (e.g. Jamba's
+[attn, mamba x7] with MoE on odd layers) and scanned with ``lax.scan`` over
+supercell repetitions — one trace per distinct block, which keeps HLO size
+independent of depth (essential for compiling 80-layer models on a
+512-device mesh).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from .mamba import init_mamba, init_mamba_state, mamba_block
+from .moe import init_moe, moe_ffn
+from .xlstm import (
+    init_mlstm,
+    init_mlstm_state,
+    init_slstm,
+    init_slstm_state,
+    mlstm_block,
+    mlstm_chunkwise,
+    slstm_block,
+)
+
+
+# ---------------------------------------------------------------------------
+# Supercell structure
+# ---------------------------------------------------------------------------
+
+def supercell_size(cfg) -> int:
+    g = 1
+    if cfg.attn_every > 1:
+        g = math.lcm(g, cfg.attn_every)
+    if cfg.family == "ssm" and cfg.slstm_every:
+        g = math.lcm(g, cfg.slstm_every)
+    if cfg.n_experts and cfg.moe_every > 1:
+        g = math.lcm(g, cfg.moe_every)
+    if cfg.n_layers % g != 0:
+        raise ValueError(f"n_layers={cfg.n_layers} not divisible by cell={g}")
+    return g
+
+
+def cell_structure(cfg) -> list[tuple[str, str]]:
+    """[(block_kind, ffn_kind)] per position in one supercell."""
+    kinds = cfg.layer_kinds()[: supercell_size(cfg)]
+    out = []
+    for i, kind in enumerate(kinds):
+        if cfg.family == "ssm":
+            ffn_kind = "none"
+        elif cfg.layer_is_moe(i):
+            ffn_kind = "moe"
+        elif cfg.d_ff:
+            ffn_kind = "dense"
+        else:
+            ffn_kind = "none"
+        out.append((kind, ffn_kind))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _init_block(key, cfg, kind: str, ffn_kind: str, dtype) -> dict:
+    ks = jax.random.split(key, 4)
+    p: dict = {"ln1": L.init_rms_norm(cfg.d_model, dtype)}
+    if kind == "attn":
+        p["attn"] = (L.init_mla(ks[0], cfg, dtype) if cfg.attention == "mla"
+                     else L.init_gqa(ks[0], cfg, dtype))
+    elif kind == "mamba":
+        p["mamba"] = init_mamba(ks[0], cfg, dtype)
+    elif kind == "mlstm":
+        p["mlstm"] = init_mlstm(ks[0], cfg, dtype)
+    elif kind == "slstm":
+        p["slstm"] = init_slstm(ks[0], cfg, dtype)
+    if ffn_kind != "none":
+        p["ln2"] = L.init_rms_norm(cfg.d_model, dtype)
+        if ffn_kind == "moe":
+            p["moe"] = init_moe(ks[1], cfg, dtype)
+        else:
+            p["ffn"] = L.init_ffn(ks[1], cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def init_params(key, cfg) -> dict:
+    dtype = jnp.dtype(cfg.param_dtype)
+    g = supercell_size(cfg)
+    reps = cfg.n_layers // g
+    struct = cell_structure(cfg)
+    keys = jax.random.split(key, reps * g + 8)
+
+    cells = []
+    for j, (kind, ffn_kind) in enumerate(struct):
+        stacked = [
+            _init_block(keys[r * g + j], cfg, kind, ffn_kind, dtype)
+            for r in range(reps)
+        ]
+        cells.append(jax.tree.map(lambda *xs: jnp.stack(xs), *stacked))
+
+    p = {
+        "embed": L._dense_init(keys[-1], (cfg.vocab, cfg.d_model), dtype),
+        "cells": cells,
+        "ln_f": L.init_rms_norm(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["unembed"] = L._dense_init(keys[-2], (cfg.d_model, cfg.vocab), dtype)
+    if cfg.family == "vlm":
+        p["vis_proj"] = L._dense_init(keys[-3], (cfg.d_model, cfg.d_model), dtype)
+    if cfg.is_encdec:
+        enc_keys = jax.random.split(keys[-4], cfg.n_enc_layers)
+        enc = [
+            {
+                "ln1": L.init_rms_norm(cfg.d_model, dtype),
+                "attn": L.init_gqa(enc_keys[i], cfg, dtype),
+                "ln2": L.init_rms_norm(cfg.d_model, dtype),
+                "ffn": L.init_ffn(jax.random.fold_in(enc_keys[i], 1),
+                                  cfg.d_model, cfg.d_ff, dtype),
+            }
+            for i in range(cfg.n_enc_layers)
+        ]
+        p["encoder"] = jax.tree.map(lambda *xs: jnp.stack(xs), *enc)
+        p["enc_pos"] = L._dense_init(keys[-5], (cfg.enc_seq, cfg.d_model), dtype)
+        p["enc_ln_f"] = L.init_rms_norm(cfg.d_model, dtype)
+        cross = [
+            {
+                "ln": L.init_rms_norm(cfg.d_model, dtype),
+                "attn": L.init_gqa(jax.random.fold_in(keys[-6], r), cfg, dtype),
+            }
+            for r in range(reps)
+        ]
+        p["cross"] = jax.tree.map(lambda *xs: jnp.stack(xs), *cross)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _block_forward(bp, x, cfg, kind, ffn_kind, positions, cache=None,
+                   cross_kv=None, cross_p=None):
+    """One block; returns (x, new_cache, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = L.rms_norm(x, bp["ln1"]["scale"], cfg.norm_eps)
+    new_cache = None
+    if kind == "attn":
+        fn = L.mla_attention if cfg.attention == "mla" else L.gqa_attention
+        o, new_cache = fn(bp["attn"], h, cfg, positions, kv_cache=cache)
+        x = x + o
+        if cross_p is not None:
+            hc = L.rms_norm(x, cross_p["ln"]["scale"], cfg.norm_eps)
+            oc, _ = L.gqa_attention(cross_p["attn"], hc, cfg, positions,
+                                    cross_kv=cross_kv)
+            x = x + oc
+    elif kind == "mamba":
+        o, new_cache = mamba_block(bp["mamba"], h, cfg, state=cache)
+        x = x + o
+    elif kind == "mlstm":
+        o, new_cache = mlstm_block(bp["mlstm"], h, cfg, state=cache)
+        x = x + o
+    elif kind == "slstm":
+        o, new_cache = slstm_block(bp["slstm"], h, cfg, state=cache)
+        x = x + o
+    if ffn_kind == "dense":
+        x = x + L.ffn(bp["ffn"], L.rms_norm(x, bp["ln2"]["scale"], cfg.norm_eps))
+    elif ffn_kind == "moe":
+        o, aux = moe_ffn(bp["moe"], L.rms_norm(x, bp["ln2"]["scale"],
+                                               cfg.norm_eps), cfg)
+        x = x + o
+    return x, new_cache, aux
+
+
+def _run_cells(params, x, cfg, positions, caches=None, cross_kv=None):
+    """Scan over supercell repetitions. caches: list per cell position of
+    stacked (R, ...) pytrees or None. Returns (x, new_caches, aux_sum)."""
+    struct = cell_structure(cfg)
+    remat = cfg.remat == "block"
+
+    def cell_fn(x, sliced):
+        cell_params, cell_caches, cross_p = sliced
+        aux_tot = jnp.zeros((), jnp.float32)
+        new_caches = []
+        for j, (kind, ffn_kind) in enumerate(struct):
+            fwd = _block_forward
+            if remat:
+                fwd = jax.checkpoint(
+                    _block_forward,
+                    static_argnums=(2, 3, 4),
+                    policy=jax.checkpoint_policies.nothing_saveable,
+                )
+            x, nc, aux = fwd(
+                cell_params[j], x, cfg, kind, ffn_kind, positions,
+                cell_caches[j] if cell_caches is not None else None,
+                cross_kv, cross_p)
+            new_caches.append(nc)
+            aux_tot = aux_tot + aux
+        return x, (new_caches, aux_tot)
+
+    xs = (params["cells"],
+          caches,
+          params.get("cross"))
+
+    def scan_body(x, sliced):
+        return cell_fn(x, sliced)
+
+    x, (new_caches, auxs) = jax.lax.scan(scan_body, x, xs)
+    return x, new_caches, auxs.sum()
+
+
+def embed_tokens(params, cfg, tokens, vision_embeds=None):
+    x = jnp.take(params["embed"], tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+    if cfg.family == "vlm" and vision_embeds is not None:
+        vis = vision_embeds.astype(x.dtype) @ params["vis_proj"].astype(x.dtype)
+        x = jnp.concatenate([vis, x], axis=1)
+    return x
+
+
+def encode(params, cfg, frames):
+    """Whisper encoder over stubbed frame embeddings (B, enc_seq, d)."""
+    x = frames.astype(jnp.dtype(cfg.dtype)) + params["enc_pos"].astype(
+        jnp.dtype(cfg.dtype))
+    positions = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+
+    def enc_layer(x, lp):
+        h = L.rms_norm(x, lp["ln1"]["scale"], cfg.norm_eps)
+        o, _ = L.gqa_attention(lp["attn"], h, cfg, positions, causal=False)
+        x = x + o
+        h2 = L.rms_norm(x, lp["ln2"]["scale"], cfg.norm_eps)
+        x = x + L.ffn(lp["ffn"], h2)
+        return x, None
+
+    x, _ = jax.lax.scan(enc_layer, x, params["encoder"])
+    return L.rms_norm(x, params["enc_ln_f"]["scale"], cfg.norm_eps)
+
+
+def forward(params, cfg, tokens, vision_embeds=None, frames=None):
+    """Teacher-forced forward -> hidden states (B, S', d)."""
+    x = embed_tokens(params, cfg, tokens, vision_embeds)
+    positions = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+    cross_kv = encode(params, cfg, frames) if cfg.is_encdec else None
+    x, _, aux = _run_cells(params, x, cfg, positions, cross_kv=cross_kv)
+    return L.rms_norm(x, params["ln_f"]["scale"], cfg.norm_eps), aux
+
+
+def rms_norm_final(params, cfg, x):
+    return L.rms_norm(x, params["ln_f"]["scale"], cfg.norm_eps)
+
+
+def logits_fn(params, cfg, h):
+    w = (params["embed"].T if cfg.tie_embeddings else params["unembed"])
+    return h @ w.astype(h.dtype)
+
+
+def chunked_softmax_xent(params, cfg, h, labels, mask, chunk: int = 512):
+    """CE loss without materializing (B, S, V) logits for the full sequence."""
+    b, s, d = h.shape
+    c = min(chunk, s)
+    pad = (-s) % c
+    hp = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+    lp = jnp.pad(labels, ((0, 0), (0, pad)))
+    mp = jnp.pad(mask, ((0, 0), (0, pad)))
+    nc = hp.shape[1] // c
+    hs = hp.reshape(b, nc, c, d).transpose(1, 0, 2, 3)
+    ls = lp.reshape(b, nc, c).transpose(1, 0, 2)
+    ms = mp.reshape(b, nc, c).transpose(1, 0, 2)
+
+    def step(carry, inp):
+        hi, li, mi = inp
+        logits = logits_fn(params, cfg, hi).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, li[..., None], axis=-1)[..., 0]
+        nll = (logz - gold) * mi
+        return (carry[0] + nll.sum(), carry[1] + mi.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        step, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (hs, ls, ms))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Caches & decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch: int, max_len: int) -> list:
+    """Per-cell-position stacked (R, ...) caches."""
+    g = supercell_size(cfg)
+    reps = cfg.n_layers // g
+    dt = jnp.dtype(cfg.dtype)
+    kv, hd = cfg.n_kv_heads, cfg.head_dim
+    caches = []
+    for kind, _ in cell_structure(cfg):
+        if kind == "attn":
+            if cfg.attention == "mla":
+                c = (
+                    jnp.zeros((reps, batch, max_len, cfg.kv_lora_rank), dt),
+                    jnp.zeros((reps, batch, max_len, cfg.rope_head_dim), dt),
+                )
+            else:
+                c = (
+                    jnp.zeros((reps, batch, max_len, kv, hd), dt),
+                    jnp.zeros((reps, batch, max_len, kv, hd), dt),
+                )
+        elif kind == "mamba":
+            # recurrent states stay fp32: they are tiny vs KV caches and
+            # accumulate across thousands of decode steps
+            st = init_mamba_state(cfg, batch, jnp.float32)
+            c = jax.tree.map(lambda a: jnp.broadcast_to(a, (reps,) + a.shape), st)
+        elif kind == "mlstm":
+            st = init_mlstm_state(cfg, batch, jnp.float32)
+            c = jax.tree.map(lambda a: jnp.broadcast_to(a, (reps,) + a.shape), st)
+        elif kind == "slstm":
+            st = init_slstm_state(cfg, batch, jnp.float32)
+            c = jax.tree.map(lambda a: jnp.broadcast_to(a, (reps,) + a.shape), st)
+        caches.append(c)
+    return caches
+
+
+def _attach_length(caches, cfg, length):
+    """Attn caches carry (k, v, len) tuples at call time; length is
+    broadcast to (reps,) so it slices cleanly through the scan."""
+    reps = cfg.n_layers // supercell_size(cfg)
+    lvec = jnp.full((reps,), length, dtype=jnp.int32)
+    out = []
+    for c, (kind, _) in zip(caches, cell_structure(cfg)):
+        out.append((*c, lvec) if kind == "attn" else c)
+    return out
+
+
+def _detach_length(new_caches, cfg):
+    out = []
+    for c, (kind, _) in zip(new_caches, cell_structure(cfg)):
+        out.append(c[:-1] if kind == "attn" else c)
+    return out
+
+
+def decode_step(params, cfg, tokens, caches, length,
+                cross_kv=None):
+    """One-token decode. tokens: (B, 1); length: scalar int32 (cache fill).
+    Returns (logits (B, V), new_caches)."""
+    x = embed_tokens(params, cfg, tokens)
+    positions = jnp.full(tokens.shape, length, dtype=jnp.int32)
+    withlen = _attach_length(caches, cfg, length)
+    x, new_caches, _ = _run_cells(params, x, cfg, positions,
+                                  caches=withlen, cross_kv=cross_kv)
+    new_caches = _detach_length(new_caches, cfg)
+    h = L.rms_norm(x, params["ln_f"]["scale"], cfg.norm_eps)
+    return logits_fn(params, cfg, h)[:, -1], new_caches

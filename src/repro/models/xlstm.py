@@ -1,0 +1,261 @@
+"""xLSTM blocks: mLSTM (matrix memory, parallel/chunkwise) and sLSTM
+(scalar memory, recurrent).
+
+mLSTM training uses the stabilized parallel form (quadratic within query
+blocks, like attention); decode keeps the (H, dh, dh) matrix memory.
+sLSTM is inherently sequential (its recurrence mixes via the hidden state),
+so training runs a ``lax.scan`` over time — faithful to arXiv:2405.04517.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import _dense_init, init_rms_norm, rms_norm
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, cfg, dtype=jnp.float32) -> dict:
+    d = cfg.d_model
+    di = cfg.mamba_expand * d      # up-projection factor 2 (paper pf=2)
+    h = cfg.n_heads
+    dh = di // h
+    ks = jax.random.split(key, 8)
+    return {
+        "up": _dense_init(ks[0], (d, 2 * di), dtype),
+        "wq": _dense_init(ks[1], (di, di), dtype),
+        "wk": _dense_init(ks[2], (di, di), dtype),
+        "wv": _dense_init(ks[3], (di, di), dtype),
+        "w_i": _dense_init(ks[4], (di, h), dtype),   # input gate (per head)
+        "w_f": _dense_init(ks[5], (di, h), dtype),   # forget gate
+        "w_o": _dense_init(ks[6], (di, di), dtype),  # output gate
+        "norm": init_rms_norm(di, dtype)["scale"],
+        "down": _dense_init(ks[7], (di, d), dtype),
+    }
+
+
+def mlstm_parallel(
+    q: jax.Array, k: jax.Array, v: jax.Array,
+    logi: jax.Array, logf: jax.Array,
+) -> jax.Array:
+    """Stabilized parallel mLSTM (B, S, H, dh) with per-head scalar gates
+    logi/logf: (B, S, H) in log space."""
+    b, s, h, dh = q.shape
+    f_cum = jnp.cumsum(logf, axis=1)                       # (B, S, H)
+    # D[t, u] = exp(f_cum[t] - f_cum[u] + logi[u]) for u <= t, stabilized
+    dmat = (f_cum[:, :, None] - f_cum[:, None, :]
+            + logi[:, None, :, :])                         # (B, S, S, H)
+    mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+    dmat = jnp.where(mask[None, :, :, None], dmat, -jnp.inf)
+    m = jnp.max(dmat, axis=2, keepdims=True)               # (B, S, 1, H)
+    dstab = jnp.exp(dmat - m)
+    scores = jnp.einsum("bthd,buhd->btuh", q, k) * (dh ** -0.5)
+    w = scores * dstab
+    norm = jnp.maximum(jnp.abs(w.sum(axis=2)), jnp.exp(-m[:, :, 0]))
+    out = jnp.einsum("btuh,buhd->bthd", w, v)
+    return out / (norm[..., None] + 1e-6)
+
+
+def mlstm_chunkwise(
+    q: jax.Array, k: jax.Array, v: jax.Array,
+    logi: jax.Array, logf: jax.Array, chunk: int = 256,
+    state: tuple | None = None,
+) -> tuple[jax.Array, tuple]:
+    """Chunkwise-parallel mLSTM: O(S/Q) sequential steps, (Q, Q) intra-chunk
+    matrices — never materializes (S, S).  Matches :func:`mlstm_parallel`
+    exactly (tests assert allclose); this is the TPU kernel's structure.
+
+    Derivation: with F_t = cumsum(logf) inside a chunk and
+    g_t = max(m_prev, max_{u<=t}(logi_u - F_u)), the stabilizer is
+    m_t = F_t + g_t, giving inter coeff e^{m_prev - g_t} and intra coeffs
+    e^{logi_u - F_u - g_t}.
+    """
+    b, s, h, dh = q.shape
+    qn = min(chunk, s)
+    pad = (-s) % qn
+    if pad:
+        zf = lambda a: jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+        q, k, v, logi = zf(q), zf(k), zf(v), zf(logi)
+        logf = jnp.pad(logf, ((0, 0), (0, pad), (0, 0)))
+    nc = q.shape[1] // qn
+    rs = lambda a: a.reshape((b, nc, qn) + a.shape[2:]).transpose(1, 0, 2, 3, 4) \
+        if a.ndim == 4 else a.reshape(b, nc, qn, h).transpose(1, 0, 2, 3)
+    qc, kc, vc, lic, lfc = rs(q), rs(k), rs(v), rs(logi), rs(logf)
+    scale = dh ** -0.5
+
+    def step(carry, inp):
+        c_prev, n_prev, m_prev = carry               # (B,H,dh,dh),(B,H,dh),(B,H)
+        qi, ki, vi, li, lf = inp
+        fcum = jnp.cumsum(lf, axis=1)                # (B, Q, H)
+        src = li - fcum                              # logi_u - F_u
+        g = jnp.maximum(m_prev[:, None], jax.lax.cummax(src, axis=1))
+        m_t = fcum + g
+        inter_c = jnp.exp(m_prev[:, None] - g)       # (B, Q, H)
+        # intra decay matrix: e^{logi_u - F_u - g_t} for u <= t
+        dmat = src[:, None, :, :] - g[:, :, None, :]   # (B, Qt, Qu, H)
+        mask = jnp.tril(jnp.ones((qn, qn), dtype=bool))
+        dmat = jnp.where(mask[None, :, :, None], dmat, -jnp.inf)
+        dstab = jnp.exp(dmat)
+        scores = jnp.einsum("bthd,buhd->btuh", qi, ki) * scale
+        w = scores * dstab
+        num = (jnp.einsum("btuh,buhd->bthd", w, vi)
+               + inter_c[..., None]
+               * jnp.einsum("bthd,bhde->bthe", qi * scale, c_prev))
+        den_intra = w.sum(axis=2)                     # (B, Q, H)
+        den_inter = inter_c * jnp.einsum("bthd,bhd->bth", qi * scale, n_prev)
+        den = jnp.maximum(jnp.abs(den_intra + den_inter), jnp.exp(-m_t))
+        out = num / (den[..., None] + 1e-6)
+        # end-of-chunk state at stabilizer m_last = F_last + g_last
+        f_last = fcum[:, -1]                          # (B, H)
+        g_last = g[:, -1]
+        coeff_u = jnp.exp(src - g_last[:, None])      # (B, Q, H)
+        c_new = (jnp.exp(m_prev - g_last)[..., None, None] * c_prev
+                 + jnp.einsum("buh,buhd,buhe->bhde", coeff_u, ki, vi))
+        n_new = (jnp.exp(m_prev - g_last)[..., None] * n_prev
+                 + jnp.einsum("buh,buhd->bhd", coeff_u, ki))
+        m_new = f_last + g_last
+        return (c_new, n_new, m_new), out
+
+    if state is None:
+        c0 = jnp.zeros((b, h, dh, dh), jnp.float32)
+        n0 = jnp.zeros((b, h, dh), jnp.float32)
+        m0 = jnp.full((b, h), -1e30, jnp.float32)
+    else:
+        c0, n0, m0 = [t.astype(jnp.float32) for t in state]
+    final, outs = jax.lax.scan(step, (c0, n0, m0), (qc, kc, vc, lic, lfc))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(b, nc * qn, h, dh)
+    return out[:, :s], final
+
+
+def mlstm_block(
+    p: dict, x: jax.Array, cfg, state: tuple | None = None
+) -> tuple[jax.Array, tuple | None]:
+    """state = (C (B,H,dh,dh), n (B,H,dh), m (B,H)) for decode."""
+    b, s, d = x.shape
+    di = cfg.mamba_expand * d
+    h = cfg.n_heads
+    dh = di // h
+
+    u, z = jnp.split(x @ p["up"].astype(x.dtype), 2, axis=-1)
+    q = (u @ p["wq"].astype(x.dtype)).reshape(b, s, h, dh)
+    k = (u @ p["wk"].astype(x.dtype)).reshape(b, s, h, dh)
+    v = (u @ p["wv"].astype(x.dtype)).reshape(b, s, h, dh)
+    logi = (u @ p["w_i"].astype(x.dtype)).astype(jnp.float32)      # (B,S,H)
+    logf = jax.nn.log_sigmoid(
+        (u @ p["w_f"].astype(x.dtype)).astype(jnp.float32))
+
+    new_state = None
+    if state is not None and s == 1:
+        # single-step recurrence (state holds UNSCALED-k accumulation;
+        # the 1/sqrt(dh) scale is applied on q — same convention as the
+        # chunkwise path so prefill + decode compose).
+        c0, n0, m0 = state
+        qf = q[:, 0].astype(jnp.float32) * (dh ** -0.5)
+        kf = k[:, 0].astype(jnp.float32)
+        vf = v[:, 0].astype(jnp.float32)
+        m1 = jnp.maximum(logf[:, 0] + m0.astype(jnp.float32), logi[:, 0])
+        c1 = (jnp.exp(logf[:, 0] + m0 - m1)[..., None, None] * c0.astype(jnp.float32)
+              + jnp.exp(logi[:, 0] - m1)[..., None, None]
+              * jnp.einsum("bhd,bhe->bhde", kf, vf))
+        n1 = (jnp.exp(logf[:, 0] + m0 - m1)[..., None] * n0.astype(jnp.float32)
+              + jnp.exp(logi[:, 0] - m1)[..., None] * kf)
+        num = jnp.einsum("bhd,bhde->bhe", qf, c1)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qf, n1)),
+                          jnp.exp(-m1))
+        o = (num / (den[..., None] + 1e-6))[:, None]               # (B,1,H,dh)
+        new_state = (c1.astype(c0.dtype), n1.astype(n0.dtype), m1)
+    elif state is not None:
+        # prefill: chunkwise with carried state
+        o, fin = mlstm_chunkwise(q.astype(jnp.float32),
+                                 k.astype(jnp.float32),
+                                 v.astype(jnp.float32), logi, logf,
+                                 state=state)
+        c1, n1, m1 = fin
+        new_state = (c1.astype(state[0].dtype), n1.astype(state[1].dtype), m1)
+    else:
+        o, _ = mlstm_chunkwise(q.astype(jnp.float32),
+                               k.astype(jnp.float32),
+                               v.astype(jnp.float32), logi, logf)
+    og = jax.nn.sigmoid(u @ p["w_o"].astype(x.dtype))
+    y = rms_norm(o.reshape(b, s, di).astype(x.dtype), p["norm"], cfg.norm_eps)
+    y = y * og * jax.nn.silu(z)
+    return y @ p["down"].astype(x.dtype), new_state
+
+
+def init_mlstm_state(cfg, batch: int, dtype=jnp.float32) -> tuple:
+    di = cfg.mamba_expand * cfg.d_model
+    h = cfg.n_heads
+    dh = di // h
+    return (
+        jnp.zeros((batch, h, dh, dh), dtype),
+        jnp.zeros((batch, h, dh), dtype),
+        jnp.full((batch, h), -1e9, jnp.float32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, cfg, dtype=jnp.float32) -> dict:
+    d = cfg.d_model
+    di = cfg.mamba_expand * d
+    ks = jax.random.split(key, 4)
+    return {
+        "up": _dense_init(ks[0], (d, 2 * di), dtype),
+        "w_gates": _dense_init(ks[1], (di, 4 * di), dtype),   # i, f, z, o
+        "r_gates": _dense_init(ks[2], (di, 4 * di), dtype),   # recurrent
+        "norm": init_rms_norm(di, dtype)["scale"],
+        "down": _dense_init(ks[3], (di, d), dtype),
+    }
+
+
+def slstm_block(
+    p: dict, x: jax.Array, cfg, state: tuple | None = None
+) -> tuple[jax.Array, tuple | None]:
+    """Scalar-memory LSTM with recurrent gate mixing (scanned over time).
+    state = (c (B,di), h (B,di), n (B,di), m (B,di))."""
+    b, s, d = x.shape
+    di = cfg.mamba_expand * d
+    u, z_out = jnp.split(x @ p["up"].astype(x.dtype), 2, axis=-1)
+
+    wg = p["w_gates"].astype(jnp.float32)
+    rg = p["r_gates"].astype(jnp.float32)
+
+    if state is None:
+        c0 = jnp.zeros((b, di), jnp.float32)
+        h0 = jnp.zeros((b, di), jnp.float32)
+        n0 = jnp.zeros((b, di), jnp.float32)
+        m0 = jnp.full((b, di), -1e9, jnp.float32)
+    else:
+        c0, h0, n0, m0 = [t.astype(jnp.float32) for t in state]
+
+    def cell(carry, ut):
+        c, hprev, n, m = carry
+        g = ut.astype(jnp.float32) @ wg + hprev @ rg
+        gi, gf, gz, go = jnp.split(g, 4, axis=-1)
+        logf = jax.nn.log_sigmoid(gf)
+        m1 = jnp.maximum(logf + m, gi)
+        i_s = jnp.exp(gi - m1)
+        f_s = jnp.exp(logf + m - m1)
+        c1 = f_s * c + i_s * jnp.tanh(gz)
+        n1 = f_s * n + i_s
+        h1 = jax.nn.sigmoid(go) * c1 / jnp.maximum(n1, 1e-6)
+        return (c1, h1, n1, m1), h1
+
+    (c1, h1, n1, m1), hs = jax.lax.scan(
+        cell, (c0, h0, n0, m0), u.transpose(1, 0, 2))
+    hs = hs.transpose(1, 0, 2).astype(x.dtype)       # (B, S, di)
+    y = rms_norm(hs, p["norm"], cfg.norm_eps) * jax.nn.silu(z_out)
+    out = y @ p["down"].astype(x.dtype)
+    new_state = (c1, h1, n1, m1) if state is not None else None
+    return out, new_state
+
+
+def init_slstm_state(cfg, batch: int, dtype=jnp.float32) -> tuple:
+    di = cfg.mamba_expand * cfg.d_model
+    z = jnp.zeros((batch, di), dtype)
+    return (z, z, z, jnp.full((batch, di), -1e9, jnp.float32))

@@ -1,0 +1,114 @@
+"""Batched serving engine: continuous-batching KV-cache slots.
+
+``ServeEngine`` owns a fixed pool of cache slots (batch lanes).  Requests
+are admitted into free lanes; every ``step()`` decodes one token for all
+active lanes (a single jit'd ``decode_step``) and retires finished lanes.
+This is the standard slot-based continuous batching loop (vLLM-style) in
+its JAX form: fixed shapes, lane masking, no re-compilation.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import decode_step, prefill
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # (S,) int32
+    max_new_tokens: int
+    out_tokens: list = field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, params, cfg, n_lanes: int = 4, max_len: int = 256):
+        self.params, self.cfg = params, cfg
+        self.n_lanes, self.max_len = n_lanes, max_len
+        from ..models import transformer as T
+        self.caches = T.init_cache(cfg, n_lanes, max_len)
+        self.lengths = jnp.zeros((n_lanes,), jnp.int32)
+        self.active: list[Request | None] = [None] * n_lanes
+        self.cur_tok = jnp.zeros((n_lanes, 1), jnp.int32)
+        self.budget = np.zeros(n_lanes, np.int64)
+
+        # per-lane decode: vmap over the lane axis with per-lane lengths so
+        # each lane masks exactly its own cache fill (no cross-lane padding
+        # leakage). tokens (L,1,1); cache leaves have lane at axis 1.
+        def one_lane(tok, caches, length):
+            # vmap consumed the lane (=batch) axis; re-insert batch=1
+            caches1 = jax.tree.map(lambda a: jnp.expand_dims(a, 1), caches)
+            logits, new_caches = decode_step(params, cfg, tok, caches1, length)
+            return logits, jax.tree.map(lambda a: jnp.squeeze(a, 1), new_caches)
+
+        self._decode = jax.jit(jax.vmap(
+            one_lane,
+            in_axes=(0, jax.tree.map(lambda _: 1, self.caches), 0),
+            out_axes=(0, jax.tree.map(lambda _: 1, self.caches)),
+        ))
+
+    # -- admission ---------------------------------------------------------
+    def try_admit(self, req: Request) -> bool:
+        for lane in range(self.n_lanes):
+            if self.active[lane] is None:
+                self._admit(lane, req)
+                return True
+        return False
+
+    def _admit(self, lane: int, req: Request) -> None:
+        # per-lane prefill: runs the prompt, then splices the lane's cache
+        # into the pool (lanes are leading-batch slices of every cache leaf)
+        logits, caches_1, ln, _ = prefill(
+            self.params, self.cfg, jnp.asarray(req.prompt)[None, :],
+            max_len=self.max_len)
+        tok = jnp.argmax(logits, axis=-1)[:, None]
+
+        def splice(pool, one):
+            # leaf shapes: pool (R, n_lanes, ...), one (R, 1, ...)
+            return jax.lax.dynamic_update_slice_in_dim(
+                pool, one.astype(pool.dtype), lane, axis=1)
+
+        self.caches = jax.tree.map(splice, self.caches, caches_1)
+        self.lengths = self.lengths.at[lane].set(ln)
+        self.cur_tok = self.cur_tok.at[lane].set(tok[0])
+        self.active[lane] = req
+        self.budget[lane] = req.max_new_tokens
+        req.out_tokens.append(int(tok[0, 0]))
+        self.budget[lane] -= 1
+
+    # -- decode ------------------------------------------------------------
+    def step(self) -> list[Request]:
+        """One token for all active lanes; returns requests finished now."""
+        if all(a is None for a in self.active):
+            return []
+        logits, self.caches = self._decode(
+            self.cur_tok[:, None, :], self.caches, self.lengths)
+        toks = jnp.argmax(logits[:, 0], axis=-1)[:, None]
+        self.cur_tok = toks
+        self.lengths = self.lengths + 1
+        finished = []
+        for lane, req in enumerate(self.active):
+            if req is None:
+                continue
+            req.out_tokens.append(int(toks[lane, 0]))
+            self.budget[lane] -= 1
+            if self.budget[lane] <= 0 or int(self.lengths[lane]) >= self.max_len - 1:
+                req.done = True
+                finished.append(req)
+                self.active[lane] = None
+        return finished
+
+    def run(self, requests: list[Request]) -> list[Request]:
+        """Drive the admit/step loop until all requests complete."""
+        pending = list(requests)
+        done: list[Request] = []
+        while pending or any(a is not None for a in self.active):
+            while pending and self.try_admit(pending[0]):
+                pending.pop(0)
+            done.extend(self.step())
+        return done

@@ -1,0 +1,4 @@
+from .optimizer import AdamW, AdamState, cosine_schedule, global_norm
+from .train_step import TrainState, init_state, make_train_step, make_optimizer
+from .trainer import Trainer, StragglerMonitor, InjectedFailure
+from . import compression

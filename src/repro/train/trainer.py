@@ -1,0 +1,128 @@
+"""Fault-tolerant training loop: checkpoint/restart, failure injection,
+elastic resume, straggler monitoring.
+
+At thousand-node scale the invariants that matter are (1) a crash at any
+instant loses at most ``ckpt_every`` steps, (2) a restart — possibly on a
+*different* number of hosts — reproduces the exact batch sequence (the data
+pipeline is counter-based), and (3) persistent stragglers are detected from
+step-time telemetry, not guessed.  All three are unit-tested on CPU by
+injecting failures.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import jax
+import numpy as np
+
+from ..ckpt import checkpoint as ckpt
+from ..data.pipeline import DataConfig, Prefetcher, SyntheticLM
+from .train_step import TrainState, init_state, make_train_step
+
+
+class InjectedFailure(RuntimeError):
+    pass
+
+
+@dataclass
+class StragglerMonitor:
+    """EWMA per-host step times; flags hosts persistently slower than the
+    fleet median by ``threshold``x.  In production the flagged host is
+    drained and its shard reassigned (here: recorded + surfaced)."""
+
+    n_hosts: int
+    alpha: float = 0.2
+    threshold: float = 1.5
+    ewma: np.ndarray = field(default=None)  # type: ignore[assignment]
+    flags: list = field(default_factory=list)
+
+    def __post_init__(self):
+        if self.ewma is None:
+            self.ewma = np.zeros(self.n_hosts)
+
+    def record(self, step: int, host_times: np.ndarray) -> list[int]:
+        self.ewma = np.where(
+            self.ewma == 0, host_times,
+            (1 - self.alpha) * self.ewma + self.alpha * host_times)
+        med = float(np.median(self.ewma))
+        slow = [h for h in range(self.n_hosts)
+                if self.ewma[h] > self.threshold * med]
+        if slow:
+            self.flags.append((step, tuple(slow)))
+        return slow
+
+
+@dataclass
+class Trainer:
+    cfg: object                  # ModelConfig
+    tc: object                   # TrainConfig
+    host_id: int = 0
+    n_hosts: int = 1
+    fail_at_step: int | None = None      # failure injection (tests)
+
+    def __post_init__(self):
+        self.step_fn = jax.jit(make_train_step(self.cfg, self.tc))
+        self.monitor = StragglerMonitor(self.n_hosts)
+
+    def _data(self, start_step: int) -> Prefetcher:
+        dc = DataConfig(
+            vocab=self.cfg.vocab, seq_len=getattr(self.tc, "seq_len", 64),
+            global_batch=getattr(self.tc, "global_batch", 8),
+            seed=self.tc.seed, family=self.cfg.family,
+            n_vision_tokens=self.cfg.n_vision_tokens,
+            d_model=self.cfg.d_model, enc_seq=self.cfg.enc_seq,
+        )
+        return Prefetcher(SyntheticLM(dc), start_step=start_step,
+                          host_id=self.host_id, n_hosts=self.n_hosts)
+
+    def init_or_restore(self, key) -> tuple[TrainState, int]:
+        from ..models import init_params
+        params = init_params(key, self.cfg)
+        state = init_state(params, self.tc)
+        start = 0
+        latest = ckpt.latest_step(self.tc.ckpt_dir)
+        if latest is not None:
+            state, start = ckpt.restore(state, self.tc.ckpt_dir,
+                                        host_id=self.host_id)
+            start += 1
+        return state, start
+
+    def run(self, steps: int | None = None, key=None) -> dict:
+        key = key if key is not None else jax.random.PRNGKey(self.tc.seed)
+        state, start = self.init_or_restore(key)
+        total = steps if steps is not None else self.tc.total_steps
+        data = self._data(start)
+        losses = []
+        pending = None
+        try:
+            for step in range(start, total):
+                got_step, batch = data.next()
+                assert got_step == step
+                if self.fail_at_step is not None and step == self.fail_at_step:
+                    raise InjectedFailure(f"injected failure at {step}")
+                t0 = time.perf_counter()
+                state, metrics = self.step_fn(state, batch)
+                loss = float(metrics["loss"])
+                dt = time.perf_counter() - t0
+                self.monitor.record(
+                    step, np.full(self.n_hosts, dt))
+                losses.append(loss)
+                if (step + 1) % self.tc.ckpt_every == 0 or step + 1 == total:
+                    if pending is not None:
+                        pending.join()
+                    pending = ckpt.save(
+                        state, self.tc.ckpt_dir, step,
+                        host_id=self.host_id, keep=self.tc.keep_ckpts,
+                        blocking=False)
+            if pending is not None:
+                pending.join()
+        finally:
+            # graceful-shutdown path (incl. caught failures): flush any
+            # in-flight async checkpoint so the restart point is the last
+            # *initiated* save, not a torn or dropped one
+            if pending is not None:
+                pending.join()
+            data.close()
+        return {"losses": losses, "final_step": total - 1,
+                "straggler_flags": self.monitor.flags}

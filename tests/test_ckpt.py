@@ -1,0 +1,68 @@
+"""Checkpointing: roundtrip, atomicity, keep-N, LATEST pointer, async."""
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import checkpoint as ck
+
+
+def tree():
+    return {
+        "a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+        "nested": {"b": jnp.ones((4,), jnp.bfloat16),
+                   "c": [jnp.zeros((2, 2)), jnp.full((1,), 7.0)]},
+    }
+
+
+def test_roundtrip(tmp_path):
+    t = tree()
+    ck.save(t, str(tmp_path), step=3)
+    restored, step = ck.restore(t, str(tmp_path))
+    assert step == 3
+    np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                  np.asarray(t["a"]))
+    assert restored["nested"]["b"].dtype == jnp.bfloat16
+
+
+def test_latest_pointer_and_keep(tmp_path):
+    t = tree()
+    for s in (1, 2, 3, 4, 5):
+        ck.save(t, str(tmp_path), step=s, keep=2)
+    assert ck.latest_step(str(tmp_path)) == 5
+    dirs = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert len(dirs) == 2
+    restored, step = ck.restore(t, str(tmp_path))
+    assert step == 5
+
+
+def test_async_save(tmp_path):
+    t = tree()
+    th = ck.save(t, str(tmp_path), step=7, blocking=False)
+    th.join(timeout=30)
+    assert ck.latest_step(str(tmp_path)) == 7
+
+
+def test_shape_mismatch_raises(tmp_path):
+    t = tree()
+    ck.save(t, str(tmp_path), step=1)
+    bad = dict(t)
+    bad["a"] = jnp.zeros((5, 5))
+    with pytest.raises(ValueError):
+        ck.restore(bad, str(tmp_path))
+
+
+def test_missing_dir_raises(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        ck.restore(tree(), str(tmp_path / "nope"))
+
+
+def test_crash_during_write_preserves_previous(tmp_path):
+    """A stray .tmp dir (simulated crash) must not shadow LATEST."""
+    t = tree()
+    ck.save(t, str(tmp_path), step=1)
+    os.makedirs(tmp_path / "step_000000002.tmp0")
+    assert ck.latest_step(str(tmp_path)) == 1
+    restored, step = ck.restore(t, str(tmp_path))
+    assert step == 1

@@ -1,0 +1,60 @@
+"""Parallelism -> traffic matrices and interconnect pricing."""
+import numpy as np
+import pytest
+
+from repro.core.collectives import (
+    InterconnectModel,
+    all_to_all_traffic,
+    hierarchical_traffic,
+    pipeline_traffic,
+    ring_allreduce_traffic,
+    training_step_traffic,
+)
+
+
+def test_ring_allreduce_traffic():
+    m = ring_allreduce_traffic(8, 1e9)
+    assert m.sum() == pytest.approx(8 * 2 * 7 / 8 * 1e9)
+    assert (np.count_nonzero(m, axis=1) == 1).all()
+
+
+def test_all_to_all_traffic():
+    m = all_to_all_traffic(8, 1e9)
+    assert np.allclose(m.sum(axis=1), 1e9)
+    assert (np.diag(m) == 0).all()
+
+
+def test_pipeline_traffic_bidirectional():
+    m = pipeline_traffic(4, 5.0)
+    assert m[0, 1] == 5.0 and m[1, 0] == 5.0
+    assert m[0, 2] == 0.0
+
+
+def test_hierarchical_rows():
+    m = hierarchical_traffic(8, groups=2, intra=1.0, inter=2.0)
+    assert m.shape == (8, 8)
+    assert m[0, 4] == 2.0  # leader ring
+
+
+def test_training_step_composition():
+    m = training_step_traffic(4, grad_bytes=1e9, moe_alltoall_bytes=1e8,
+                              compression=0.25)
+    base = ring_allreduce_traffic(4, 0.25e9) + all_to_all_traffic(4, 1e8)
+    assert np.allclose(m, base)
+
+
+def test_interconnect_vermilion_vs_oblivious_on_ring():
+    """DP gradient rings are permutations: Vermilion's best case."""
+    ic = InterconnectModel(link_gbps=400, d_hat=4, recfg_frac=1 / 9, k=3)
+    m = ring_allreduce_traffic(8, 10e9)
+    bw_v = ic.effective_bandwidth(m, "vermilion")
+    bw_o = ic.effective_bandwidth(m, "oblivious")
+    assert bw_v > bw_o  # > 2/3 vs 1/2 ceiling
+    t_v = ic.step_time(m, "vermilion")
+    t_o = ic.step_time(m, "oblivious")
+    assert t_v < t_o
+
+
+def test_step_time_zero_traffic():
+    ic = InterconnectModel()
+    assert ic.step_time(np.zeros((4, 4))) == 0.0

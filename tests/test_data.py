@@ -1,0 +1,62 @@
+"""Data pipeline: determinism, host sharding, prefetcher, copy structure."""
+import numpy as np
+
+from repro.data.pipeline import DataConfig, Prefetcher, SyntheticLM
+
+
+def cfg(**kw):
+    base = dict(vocab=128, seq_len=16, global_batch=4, seed=7)
+    base.update(kw)
+    return DataConfig(**base)
+
+
+def test_determinism_per_step():
+    ds = SyntheticLM(cfg())
+    a = ds.batch_at(3)
+    b = ds.batch_at(3)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = ds.batch_at(4)
+    assert (a["tokens"] != c["tokens"]).any()
+
+
+def test_host_sharding_shapes():
+    ds = SyntheticLM(cfg())
+    h0 = ds.batch_at(0, host_id=0, n_hosts=2)
+    h1 = ds.batch_at(0, host_id=1, n_hosts=2)
+    assert h0["tokens"].shape == (2, 16)
+    assert (h0["tokens"] != h1["tokens"]).any()
+
+
+def test_labels_shifted():
+    ds = SyntheticLM(cfg())
+    b = ds.batch_at(0)
+    # labels are next-token targets of the same underlying stream
+    assert b["tokens"].shape == b["labels"].shape
+
+
+def test_copy_structure_learnable():
+    ds = SyntheticLM(cfg(seq_len=20))
+    b = ds.batch_at(0)
+    full = np.concatenate([b["tokens"], b["labels"][:, -1:]], axis=1)
+    half = full.shape[1] // 2
+    np.testing.assert_array_equal(full[:, half:2 * half], full[:, :half])
+
+
+def test_vlm_and_encdec_extras():
+    d1 = SyntheticLM(cfg(family="vlm", n_vision_tokens=4, d_model=8))
+    assert d1.batch_at(0)["vision_embeds"].shape == (4, 4, 8)
+    d2 = SyntheticLM(cfg(family="encdec", enc_seq=6, d_model=8))
+    assert d2.batch_at(0)["frames"].shape == (4, 6, 8)
+
+
+def test_prefetcher_order_and_close():
+    ds = SyntheticLM(cfg())
+    pf = Prefetcher(ds, start_step=5)
+    try:
+        for want in (5, 6, 7):
+            step, batch = pf.next()
+            assert step == want
+            ref = ds.batch_at(step)
+            np.testing.assert_array_equal(batch["tokens"], ref["tokens"])
+    finally:
+        pf.close()

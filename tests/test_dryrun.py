@@ -1,0 +1,91 @@
+"""Dry-run machinery: one small cell lowers+compiles per mesh (subprocess,
+so the 512-device flag never leaks); roofline parser sanity."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def run_cell(arch, shape, multi_pod=False, env=None):
+    cmd = [sys.executable, "-m", "repro.launch.dryrun",
+           "--arch", arch, "--shape", shape]
+    if multi_pod:
+        cmd.append("--multi-pod")
+    e = dict(os.environ, PYTHONPATH=SRC)
+    if env:
+        e.update(env)
+    out = subprocess.run(cmd, capture_output=True, text=True, timeout=900,
+                         env=e)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return json.loads([l for l in out.stdout.splitlines()
+                       if l.startswith("{")][-1])
+
+
+@pytest.mark.slow
+def test_single_pod_train_cell():
+    r = run_cell("qwen1.5-0.5b", "train_4k")
+    assert r["ok"] and r["n_devices"] == 256
+    assert r["flops_per_device"] > 0
+    c = r["collectives"]
+    assert c["all-reduce"] > 0 or c["reduce-scatter"] > 0
+
+
+@pytest.mark.slow
+def test_multi_pod_decode_cell():
+    r = run_cell("whisper-tiny", "decode_32k", multi_pod=True)
+    assert r["ok"] and r["n_devices"] == 512
+    assert r["mesh"] == "2x16x16"
+
+
+def test_roofline_hlo_parser_counts_scan_bodies():
+    """The parser must multiply while-body work by the trip count."""
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    from benchmarks.roofline import analyze_hlo
+    import jax, jax.numpy as jnp
+
+    def scanned(x, ws):
+        def body(c, w):
+            return jnp.tanh(c @ w), None
+        return jax.lax.scan(body, x, ws)[0]
+
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    ws = jax.ShapeDtypeStruct((8, 64, 64), jnp.float32)
+    txt = jax.jit(scanned).lower(x, ws).compile().as_text()
+    a = analyze_hlo(txt)
+    expect = 8 * 2 * 64 * 64 * 64
+    assert 0.5 * expect <= a["flops"] <= 2.5 * expect, a["flops"]
+
+
+def test_analytic_model_terms_positive():
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    from benchmarks.analytic import cell_cost
+    from repro.configs import REGISTRY, shape_cells
+
+    for arch in REGISTRY:
+        for shape in shape_cells(arch):
+            c = cell_cost(arch, shape)
+            assert c.flops > 0 and c.mem_bytes > 0 and c.coll_bytes > 0
+            assert c.dominant in ("compute", "memory", "collective")
+            assert 0 < c.roofline_frac <= 1.2, (arch, shape, c.roofline_frac)
+
+
+def test_param_spec_rules():
+    import jax
+    from jax.sharding import PartitionSpec as P
+    sys.path.insert(0, SRC)
+    from repro.launch.mesh import make_host_mesh
+    from repro.parallel.sharding import param_spec
+
+    mesh = make_host_mesh(1, 1)
+    # stacked layer dim is never sharded; input-major projections put
+    # the contracting dim on data, the wide dim on model
+    s = param_spec("cells/0/attn/wq", (4, 64, 128), mesh)
+    assert len(s) == 3 and s[0] is None
+    assert s[1] in (None, "data") and s[2] in (None, "model")
+    # embeddings: vocab on model
+    e = param_spec("embed", (64000, 4096), mesh)
+    assert e[0] in (None, "model")

@@ -1,0 +1,54 @@
+"""Appendix A: distributed traffic estimation via AllGather + EWMA."""
+import numpy as np
+
+from repro.core.estimation import (
+    TrafficEstimator,
+    allgather_rows,
+    estimate_global_matrix,
+    quantize_row,
+)
+
+
+def test_quantize_row_bounds():
+    row = np.array([0.0, 1e12, 3.3e5])
+    q = quantize_row(row, k=3, bits_per_slot=1e5)
+    assert q.dtype == np.uint16
+    assert q[0] == 0 and q[1] == 65535
+    assert q[2] == int(np.floor(3.3e5 * (2 / 3) / 1e5))
+
+
+def test_allgather_complete_after_period():
+    n = 8
+    rng = np.random.default_rng(0)
+    rows = rng.integers(0, 100, size=(n, n)).astype(np.uint16)
+    views = allgather_rows(rows)
+    for i in range(n):
+        assert (views[i] == rows).all()
+
+
+def test_allgather_partial_steps():
+    n = 8
+    rows = np.eye(n, dtype=np.uint16)
+    views = allgather_rows(rows, steps=3)
+    # node 0 has rows from nodes within 3 hops upstream only
+    have = (views[0] == rows).all(axis=1) | (rows.sum(axis=1) == 0)
+    assert have[0]
+    assert not (views[0][(0 - 4) % n] == rows[(0 - 4) % n]).all()
+
+
+def test_ewma_estimator():
+    est = TrafficEstimator(n=4, alpha=0.5)
+    e1 = est.update(np.array([4.0, 0, 0, 0]))
+    assert e1[0] == 2.0
+    e2 = est.update(np.array([4.0, 0, 0, 0]))
+    assert e2[0] == 3.0
+
+
+def test_estimate_global_matrix_consistent():
+    n = 6
+    rng = np.random.default_rng(1)
+    period = rng.random((n, n)) * 1e6
+    ests = [TrafficEstimator(n=n) for _ in range(n)]
+    g = estimate_global_matrix(period, ests, k=3, bits_per_slot=1e4)
+    assert g.shape == (n, n)
+    assert (g >= 0).all()

@@ -1,0 +1,159 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, interpret mode.
+
+Tolerances: fp32 kernels differ from the oracles only by reduction order;
+bf16 inputs get looser bounds.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.decode_attention.decode_attention import decode_attention
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.flash_attention.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.mamba_scan.mamba_scan import mamba_scan
+from repro.kernels.mamba_scan.ref import mamba_scan_ref
+from repro.kernels.mlstm.mlstm import mlstm_chunkwise_pallas
+from repro.kernels.mlstm.ref import mlstm_ref
+from repro.kernels.sinkhorn.ref import sinkhorn_ref
+from repro.kernels.sinkhorn.sinkhorn import sinkhorn_pallas
+
+KEY = jax.random.PRNGKey(0)
+
+
+def rnd(shape, dtype=jnp.float32, i=0, scale=1.0):
+    return (jax.random.normal(jax.random.fold_in(KEY, i), shape) *
+            scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n", [64, 128, 256, 512])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_sinkhorn_sweep(n, dtype):
+    m = (jax.random.uniform(KEY, (n, n)) + 0.01).astype(dtype)
+    got = sinkhorn_pallas(m)
+    want = sinkhorn_ref(m)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-3 if dtype == jnp.bfloat16 else 1e-5,
+                               atol=1e-6)
+    # result is doubly stochastic
+    np.testing.assert_allclose(np.asarray(got).sum(0), 1.0, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("b,sq,sk,h,kv,dh", [
+    (2, 256, 256, 4, 2, 64),
+    (1, 128, 512, 8, 8, 128),
+    (1, 512, 512, 8, 1, 64),     # MQA
+    (2, 128, 128, 4, 4, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(b, sq, sk, h, kv, dh, dtype):
+    q, k, v = (rnd((b, sq, h, dh), dtype, 0), rnd((b, sk, kv, dh), dtype, 1),
+               rnd((b, sk, kv, dh), dtype, 2))
+    got = flash_attention(q, k, v, causal=True)
+    want = attention_ref(q, k, v, causal=True)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("window", [64, 128])
+def test_flash_attention_sliding_window(window):
+    q, k, v = (rnd((1, 256, 4, 64), i=0), rnd((1, 256, 2, 64), i=1),
+               rnd((1, 256, 2, 64), i=2))
+    got = flash_attention(q, k, v, causal=True, window=window)
+    want = attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_noncausal():
+    q, k, v = (rnd((2, 128, 4, 64), i=0), rnd((2, 128, 4, 64), i=1),
+               rnd((2, 128, 4, 64), i=2))
+    got = flash_attention(q, k, v, causal=False)
+    want = attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("b,sk,h,kv,dh,ln", [
+    (2, 1024, 8, 2, 64, 700),
+    (1, 2048, 4, 4, 128, 2047),
+    (2, 512, 8, 1, 64, 0),
+    (1, 4096, 16, 2, 128, 1234),
+])
+def test_decode_attention_sweep(b, sk, h, kv, dh, ln):
+    q = rnd((b, 1, h, dh), i=0)
+    k = rnd((b, sk, kv, dh), i=1)
+    v = rnd((b, sk, kv, dh), i=2)
+    got = decode_attention(q, k, v, jnp.int32(ln))
+    want = decode_attention_ref(q, k, v, jnp.int32(ln))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_decode_attention_bf16():
+    q = rnd((2, 1, 8, 64), jnp.bfloat16, 0)
+    k = rnd((2, 512, 2, 64), jnp.bfloat16, 1)
+    v = rnd((2, 512, 2, 64), jnp.bfloat16, 2)
+    got = decode_attention(q, k, v, jnp.int32(400))
+    want = decode_attention_ref(q, k, v, jnp.int32(400))
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("b,s,d,n,blk_d,chunk", [
+    (2, 256, 256, 16, 128, 128),
+    (1, 512, 512, 8, 256, 64),
+    (2, 128, 64, 16, 64, 128),
+])
+def test_mamba_scan_sweep(b, s, d, n, blk_d, chunk):
+    a = jax.nn.sigmoid(rnd((b, s, d, n), i=0))
+    bb = rnd((b, s, d, n), i=1, scale=0.1)
+    c = rnd((b, s, n), i=2)
+    got = mamba_scan(a, bb, c, blk_d=blk_d, chunk=chunk)
+    want = mamba_scan_ref(a, bb, c)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("b,s,h,dh,chunk", [
+    (2, 256, 4, 64, 64),
+    (1, 512, 2, 128, 128),
+    (2, 128, 8, 32, 32),
+])
+def test_mlstm_kernel_sweep(b, s, h, dh, chunk):
+    q, k, v = rnd((b, s, h, dh), i=0), rnd((b, s, h, dh), i=1), rnd(
+        (b, s, h, dh), i=2)
+    li = rnd((b, s, h), i=3)
+    lf = jax.nn.log_sigmoid(rnd((b, s, h), i=4) + 2)
+    got = mlstm_chunkwise_pallas(q, k, v, li, lf, chunk=chunk)
+    want = mlstm_ref(q, k, v, li, lf)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-3, atol=5e-4)
+
+
+def test_mlstm_kernel_matches_sequential_recurrence():
+    """Kernel must agree with the step-by-step mLSTM cell (ground truth)."""
+    from repro.models.xlstm import mlstm_block, init_mlstm, init_mlstm_state
+    from repro.configs import get_config
+    cfg = get_config("xlstm-350m", smoke=True)
+    p = init_mlstm(KEY, cfg)
+    b, s = 1, 64
+    x = rnd((b, s, cfg.d_model), i=7, scale=0.5)
+    full, _ = mlstm_block(p, x, cfg)          # uses mlstm_chunkwise (oracle)
+    st = init_mlstm_state(cfg, b, jnp.float32)
+    outs = []
+    for t in range(s):
+        o, st = mlstm_block(p, x[:, t:t + 1], cfg, state=st)
+        outs.append(o)
+    seq = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(seq), np.asarray(full),
+                               rtol=1e-3, atol=1e-4)

@@ -1,0 +1,66 @@
+"""Regular multigraph -> perfect matching decomposition."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.matching import (
+    decompose_matchings,
+    decompose_matchings_euler,
+    extract_perfect_matching,
+    is_regular,
+)
+
+
+def random_regular(n, d, rng):
+    e = np.zeros((n, n), dtype=np.int64)
+    for _ in range(d):
+        p = rng.permutation(n)
+        e[np.arange(n), p] += 1
+    return e
+
+
+def _check(e, perms):
+    d, n = perms.shape
+    assert d == e.sum(axis=1)[0]
+    recomposed = np.zeros_like(e)
+    for p in perms:
+        assert sorted(p.tolist()) == list(range(n))  # permutation
+        recomposed[np.arange(n), p] += 1
+    assert (recomposed == e).all()
+
+
+@pytest.mark.parametrize("fn", [decompose_matchings, decompose_matchings_euler])
+@pytest.mark.parametrize("seed", range(6))
+def test_decompose_random_regular(fn, seed):
+    rng = np.random.default_rng(seed)
+    n, d = int(rng.integers(2, 20)), int(rng.integers(1, 16))
+    e = random_regular(n, d, rng)
+    _check(e, fn(e))
+
+
+def test_not_regular_raises():
+    e = np.array([[1, 0], [1, 1]])
+    with pytest.raises(ValueError):
+        decompose_matchings(e)
+    with pytest.raises(ValueError):
+        decompose_matchings_euler(e)
+
+
+def test_extract_matching_identity():
+    e = np.eye(4, dtype=np.int64) * 3
+    p = extract_perfect_matching(e)
+    assert (p == np.arange(4)).all()
+
+
+def test_is_regular():
+    assert is_regular(np.ones((3, 3), dtype=int))
+    assert not is_regular(np.array([[2, 0], [1, 1]]))
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(2, 12), st.integers(1, 10), st.integers(0, 10_000))
+def test_decompose_hypothesis(n, d, seed):
+    rng = np.random.default_rng(seed)
+    e = random_regular(n, d, rng)
+    _check(e, decompose_matchings(e))
+    _check(e, decompose_matchings_euler(e))

@@ -1,0 +1,142 @@
+"""Per-architecture smoke tests: reduced configs, one forward/train step on
+CPU, asserting output shapes and no NaNs; plus a decode-step parity check."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import SMOKE, get_config, shape_cells
+from repro.models import decode_step, init_params, loss_fn, prefill
+
+ARCHS = sorted(SMOKE.keys())
+
+
+def make_batch(cfg, key, b=2, s=24):
+    ks = jax.random.split(key, 4)
+    batch = {
+        "tokens": jax.random.randint(ks[0], (b, s), 0, cfg.vocab),
+        "labels": jax.random.randint(ks[1], (b, s), 0, cfg.vocab),
+    }
+    if cfg.family == "vlm":
+        batch["vision_embeds"] = jax.random.normal(
+            ks[2], (b, cfg.n_vision_tokens, cfg.d_model), jnp.float32)
+    if cfg.is_encdec:
+        batch["frames"] = jax.random.normal(
+            ks[3], (b, cfg.enc_seq, cfg.d_model), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_loss_and_grad(arch):
+    cfg = get_config(arch, smoke=True)
+    key = jax.random.PRNGKey(0)
+    params = init_params(key, cfg)
+    batch = make_batch(cfg, key)
+
+    def loss_only(p):
+        return loss_fn(p, cfg, batch)[0]
+
+    loss, grads = jax.jit(jax.value_and_grad(loss_only))(params)
+    assert np.isfinite(float(loss)), arch
+    # loss should be near ln(vocab) at init
+    assert abs(float(loss) - np.log(cfg.vocab)) < 2.0, (arch, float(loss))
+    gnorm = jax.tree.reduce(
+        lambda a, g: a + float(jnp.sum(jnp.square(g))), grads, 0.0)
+    assert np.isfinite(gnorm) and gnorm > 0, arch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_matches_teacher_forcing(arch):
+    """Prefill + N decode steps must reproduce the teacher-forced logits."""
+    cfg = get_config(arch, smoke=True)
+    if cfg.is_encdec:
+        pytest.skip("enc-dec covered by test_whisper_decode")
+    key = jax.random.PRNGKey(1)
+    params = init_params(key, cfg)
+    b, s = 2, 16
+    tokens = jax.random.randint(key, (b, s), 0, cfg.vocab)
+
+    from repro.models import transformer as T
+    if cfg.family == "vlm":
+        h, _ = T.forward(params, cfg, tokens,
+                         vision_embeds=jnp.zeros((b, cfg.n_vision_tokens,
+                                                  cfg.d_model)))
+    else:
+        h, _ = T.forward(params, cfg, tokens)
+    full_logits = T.logits_fn(params, cfg, h)
+
+    if cfg.family == "vlm":
+        pytest.skip("vlm decode needs vision prefix; covered by forward test")
+
+    def check(got, want, msg):
+        got, want = np.asarray(got), np.asarray(want)
+        if cfg.n_experts:
+            # capacity-based MoE: token competition differs between the
+            # teacher-forced batch and per-step decode, so occasional
+            # capacity drops legitimately perturb a few logits.
+            frac = np.mean(~np.isclose(got, want, rtol=3e-2, atol=3e-2))
+            assert frac < 0.02, (msg, frac)
+        else:
+            np.testing.assert_allclose(got, want, rtol=3e-2, atol=3e-2,
+                                       err_msg=msg)
+
+    split = s // 2
+    logits, caches, length, cross = prefill(params, cfg, tokens[:, :split],
+                                            max_len=s + 4)
+    check(logits, full_logits[:, split - 1], f"{arch} prefill")
+    for i in range(split, s):
+        logits, caches = decode_step(params, cfg, tokens[:, i:i + 1],
+                                     caches, length, cross_kv=cross)
+        length = length + 1
+        check(logits, full_logits[:, i], f"{arch} step {i}")
+
+
+def test_whisper_decode():
+    cfg = get_config("whisper-tiny", smoke=True)
+    key = jax.random.PRNGKey(2)
+    params = init_params(key, cfg)
+    b, s = 2, 12
+    tokens = jax.random.randint(key, (b, s), 0, cfg.vocab)
+    frames = jax.random.normal(key, (b, cfg.enc_seq, cfg.d_model))
+
+    from repro.models import transformer as T
+    h, _ = T.forward(params, cfg, tokens, frames=frames)
+    full_logits = T.logits_fn(params, cfg, h)
+
+    logits, caches, length, cross = prefill(params, cfg, tokens[:, :6],
+                                            max_len=s + 2, frames=frames)
+    np.testing.assert_allclose(np.asarray(logits),
+                               np.asarray(full_logits[:, 5]),
+                               rtol=2e-2, atol=2e-2)
+    for i in range(6, s):
+        logits, caches = decode_step(params, cfg, tokens[:, i:i + 1],
+                                     caches, length, cross_kv=cross)
+        length = length + 1
+        np.testing.assert_allclose(np.asarray(logits),
+                                   np.asarray(full_logits[:, i]),
+                                   rtol=3e-2, atol=3e-2, err_msg=f"step {i}")
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_shape_cells_defined(arch):
+    cells = shape_cells(arch)
+    assert "train_4k" in cells
+    if arch in ("jamba-1.5-large-398b", "xlstm-350m", "mixtral-8x7b"):
+        assert "long_500k" in cells
+    else:
+        assert "long_500k" not in cells
+
+
+def test_param_count_sane():
+    """Full configs land in the right ballpark (vs published sizes)."""
+    expect = {
+        "yi-9b": (7e9, 12e9),
+        "llama3.2-3b": (2.5e9, 4.5e9),
+        "qwen1.5-0.5b": (0.3e9, 0.8e9),
+        "mixtral-8x7b": (40e9, 55e9),
+        "whisper-tiny": (2e7, 8e7),
+        "internvl2-76b": (6e10, 9e10),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = get_config(arch).param_count()
+        assert lo < n < hi, (arch, n)

@@ -1,0 +1,32 @@
+"""JAX-native schedule execution (ppermute) on 8 fake host devices.
+
+Runs in a subprocess so the 8-device XLA flag never leaks into other tests.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys, json
+sys.path.insert(0, {src!r})
+from repro.core.optical import run_schedule_demo
+print(json.dumps(run_schedule_demo(8)))
+"""
+
+
+@pytest.mark.slow
+def test_optical_collectives_8dev():
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run(
+        [sys.executable, "-c", SCRIPT.format(src=os.path.abspath(src))],
+        capture_output=True, text=True, timeout=600,
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert res == {"allgather_ok": True, "allreduce_ok": True,
+                   "permute_ok": True}

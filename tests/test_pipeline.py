@@ -1,0 +1,46 @@
+"""GPipe pipeline over shard_map+ppermute vs sequential reference
+(4 fake devices, subprocess so the XLA flag stays contained)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import sys, json
+sys.path.insert(0, "__SRC__")
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import Mesh
+from repro.parallel.pipeline import pipeline_apply
+
+S, M, MB, D = 4, 6, 2, 8
+key = jax.random.PRNGKey(0)
+ws = jax.random.normal(key, (S, D, D)) * 0.3
+
+def stage_fn(w, x):
+    return jnp.tanh(x @ w)
+
+mesh = Mesh(np.array(jax.devices()[:S]), ("stage",))
+x = jax.random.normal(jax.random.fold_in(key, 1), (M, MB, D))
+got = pipeline_apply(stage_fn, ws, x, mesh, axis="stage")
+
+want = x
+for i in range(S):
+    want = jnp.tanh(want @ ws[i])
+ok = bool(jnp.allclose(got, want, atol=1e-5))
+print(json.dumps({"ok": ok, "err": float(jnp.abs(got - want).max())}))
+"""
+
+
+@pytest.mark.slow
+def test_gpipe_matches_sequential():
+    src = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+    out = subprocess.run(
+        [sys.executable, "-c", SCRIPT.replace("__SRC__", src)],
+        capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert res["ok"], res

@@ -1,0 +1,50 @@
+"""Property-based (hypothesis) tests of the system's core invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import traffic as T
+from repro.core.schedule import vermilion_emulated_topology, vermilion_schedule
+from repro.core.throughput import theorem3_bound, vermilion_throughput
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(4, 14), st.integers(2, 4), st.integers(0, 1000),
+       st.floats(0.1, 1.0))
+def test_theorem3_bound_property(n, k, seed, density):
+    """For ANY hose traffic matrix, Vermilion >= (k-1)/k (Theorem 3)."""
+    m = T.random_hose(n, seed=seed, density=density)
+    th = vermilion_throughput(m, k=k, d_hat=1, seed=seed)
+    assert th >= theorem3_bound(k) - 1e-9
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(3, 14), st.integers(2, 5), st.integers(0, 1000))
+def test_emulated_topology_always_regular(n, k, seed):
+    rng = np.random.default_rng(seed)
+    m = rng.exponential(1.0, size=(n, n)) * (rng.random((n, n)) < 0.5)
+    np.fill_diagonal(m, 0.0)
+    e = vermilion_emulated_topology(m, k=k, seed=seed)
+    assert (e.sum(axis=1) == k * n).all()
+    assert (e.sum(axis=0) == k * n).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(3, 10), st.integers(0, 500))
+def test_schedule_serves_every_pair(n, seed):
+    """The oblivious residual guarantees any-to-any direct connectivity."""
+    rng = np.random.default_rng(seed)
+    m = rng.exponential(1.0, size=(n, n))
+    np.fill_diagonal(m, 0.0)
+    s = vermilion_schedule(m, k=2, seed=seed)
+    counts = s.edge_counts()
+    assert ((counts + np.eye(n, dtype=int)) > 0).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(3, 10), st.integers(0, 500), st.integers(2, 4))
+def test_throughput_scale_invariance(n, seed, k):
+    """Throughput is invariant to scaling the demand matrix."""
+    m = T.random_hose(n, seed=seed)
+    t1 = vermilion_throughput(m, k=k, seed=seed)
+    t2 = vermilion_throughput(3.7 * m, k=k, seed=seed)
+    assert abs(t1 - t2) < 1e-6

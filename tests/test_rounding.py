@@ -1,0 +1,66 @@
+"""Matrix rounding (Bacharach): exactness, sums, hypothesis sweeps."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.rounding import round_matrix, check_rounding
+from repro.core.traffic import random_hose
+
+
+def test_integer_matrix_is_fixed_point():
+    rng = np.random.default_rng(0)
+    a = rng.integers(0, 7, size=(9, 9)).astype(float)
+    assert (round_matrix(a) == a).all()
+
+
+def test_zero_matrix():
+    assert (round_matrix(np.zeros((5, 5))) == 0).all()
+
+
+def test_single_entry():
+    assert round_matrix(np.array([[0.4]])) in (0, 1)
+    r = round_matrix(np.array([[2.5]]))
+    assert r[0, 0] in (2, 3)
+
+
+def test_rectangular():
+    rng = np.random.default_rng(1)
+    a = rng.random((3, 11)) * 4
+    check_rounding(a, round_matrix(a))
+
+
+@pytest.mark.parametrize("seed", range(12))
+def test_random_matrices(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(2, 30))
+    a = rng.gamma(0.7, 2.0, size=(n, n)) * (rng.random((n, n)) < 0.6)
+    check_rounding(a, round_matrix(a))
+
+
+@pytest.mark.parametrize("k", [2, 3, 6])
+@pytest.mark.parametrize("seed", range(4))
+def test_algorithm1_budget(k, seed):
+    """Scaled hose matrices: rounded row/col sums stay within (k-1)*n."""
+    n = 16
+    m = random_hose(n, seed=seed)
+    a = (k - 1) * n * m
+    r = round_matrix(a)
+    check_rounding(a, r)
+    assert r.sum(axis=1).max() <= (k - 1) * n
+    assert r.sum(axis=0).max() <= (k - 1) * n
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    st.integers(2, 12),
+    st.integers(0, 10_000),
+    st.floats(0.05, 1.0),
+)
+def test_rounding_properties_hypothesis(n, seed, density):
+    rng = np.random.default_rng(seed)
+    a = rng.exponential(1.7, size=(n, n)) * (rng.random((n, n)) < density)
+    r = round_matrix(a)
+    check_rounding(a, r)
+    # exact entry bracketing
+    assert (r >= np.floor(a - 1e-9)).all()
+    assert (r <= np.ceil(a + 1e-9)).all()

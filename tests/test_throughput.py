@@ -1,0 +1,109 @@
+"""Throughput theory: Theorems 1-3, the 1/2 oblivious bound, Fig 7/8 trends."""
+import numpy as np
+import pytest
+
+from repro.core import traffic as T
+from repro.core.schedule import vermilion_schedule, oblivious_schedule
+from repro.core.throughput import (
+    oblivious_throughput,
+    schedule_throughput,
+    theorem3_bound,
+    throughput_multi_hop,
+    throughput_single_hop,
+    vermilion_throughput,
+)
+
+N, D_HAT = 16, 4
+
+
+def test_single_hop_closed_form():
+    cap = np.array([[0, 2.0], [1.0, 0]])
+    m = np.array([[0, 1.0], [4.0, 0]])
+    assert throughput_single_hop(cap, m) == pytest.approx(0.25)
+
+
+def test_multi_hop_two_paths():
+    # 3-node line: 0->1->2 with caps 1; demand 0->2 of 1 => theta = 1
+    cap = np.zeros((3, 3))
+    cap[0, 1] = cap[1, 2] = 1.0
+    m = np.zeros((3, 3))
+    m[0, 2] = 1.0
+    assert throughput_multi_hop(cap, m) == pytest.approx(1.0, abs=1e-6)
+
+
+def test_multi_hop_geq_single_hop():
+    m = T.skewed(8, 0.6, seed=3)
+    s = vermilion_schedule(m, k=3, d_hat=2)
+    cap = s.emulated_capacity()
+    demand = T.hose_normalize(m, d_hat=2.0)
+    assert (throughput_multi_hop(cap, demand)
+            >= throughput_single_hop(cap, demand) - 1e-9)
+
+
+@pytest.mark.parametrize("k", [2, 3, 6])
+def test_theorem3_lower_bound(k):
+    """Vermilion >= (k-1)/k for hose traffic (Theorem 3, recfg=0)."""
+    bound = theorem3_bound(k)
+    for seed in range(5):
+        m = T.random_hose(N, seed=seed)
+        th = vermilion_throughput(m, k=k, d_hat=D_HAT, seed=seed)
+        assert th >= bound - 1e-9, (k, seed, th)
+
+
+def test_theorem3_with_reconfiguration():
+    bound = theorem3_bound(3, recfg_frac=1 / 9)
+    m = T.random_hose(N, seed=7)
+    th = vermilion_throughput(m, k=3, d_hat=D_HAT, recfg_frac=1 / 9, seed=7)
+    assert th >= bound - 1e-9
+
+
+def test_oblivious_half_bound_on_ring():
+    """The tight 1/2 worst case of oblivious periodic networks (Sec 2.2)."""
+    th = oblivious_throughput(T.ring(N), d_hat=D_HAT, multi_hop=True)
+    assert th == pytest.approx(0.5, abs=0.02)
+
+
+def test_oblivious_single_hop_collapses_on_ring():
+    th = oblivious_throughput(T.ring(N), d_hat=D_HAT, multi_hop=False)
+    assert th < 0.1
+
+
+def test_vermilion_beats_oblivious_on_skew():
+    """The separation result: traffic-aware > oblivious under skew."""
+    m = T.skewed(N, 0.9, seed=1)
+    tv = vermilion_throughput(m, k=3, d_hat=D_HAT)
+    to = oblivious_throughput(m, d_hat=D_HAT, multi_hop=True)
+    assert tv > to
+
+
+def test_oblivious_near_one_on_uniform():
+    th = oblivious_throughput(T.uniform(N), d_hat=D_HAT, multi_hop=True)
+    assert th > 0.9
+
+
+def test_k_monotone():
+    """Fig 8a: throughput tracks (k-1)/k upward."""
+    m = T.ring(12)
+    ths = [vermilion_throughput(m, k=k, d_hat=4) for k in (2, 3, 6)]
+    assert ths[0] < ths[1] < ths[2]
+
+
+def test_integer_matrix_full_throughput():
+    """Theorem 2: integer-multiple traffic served at ~full throughput by a
+    matched periodic schedule (k controls how close)."""
+    n = 8
+    m = T.ring(n)  # entries are integer multiples of anything
+    th = vermilion_throughput(m, k=8, d_hat=4)
+    assert th >= 7 / 8 - 1e-9
+
+
+def test_bvn_ideal_full_throughput():
+    """Theorem 1: zero-reconfig BvN serves saturated matrices fully."""
+    from repro.core.schedule import bvn_decompose
+    n = 6
+    m = T.saturate(T.skewed(n, 0.5, seed=4) + 1e-6)
+    lams, perms = bvn_decompose(m)
+    cap = np.zeros((n, n))
+    for lam, p in zip(lams, perms):
+        cap[np.arange(n), p] += lam
+    assert throughput_single_hop(cap, m) >= 1 - 1e-6
