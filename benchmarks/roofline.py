@@ -91,6 +91,7 @@ def analyze_hlo(text: str) -> dict:
     # call edges: (callee, kind, parent)
     calls: dict[str, list[tuple[str, str]]] = {n: [] for n in blocks}
     while_info: dict[str, tuple[str, str]] = {}   # body -> (cond, parent)
+    while_trips: dict[str, int] = {}              # body -> known trip count
     fused_callees: set[str] = set()
     for name, b in blocks.items():
         for ln in b["lines"]:
@@ -112,6 +113,11 @@ def analyze_hlo(text: str) -> dict:
                         body = callee
             if body is not None:
                 while_info[body] = (cond, name)
+                # XLA annotates unrolled-loop metadata on the while op
+                # itself; prefer it over scraping the condition's constants
+                tm = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', ln)
+                if tm:
+                    while_trips[body] = int(tm.group(1))
 
     # multiplicity via BFS from entry
     mult: dict[str, float] = {entry: 1.0}
@@ -128,8 +134,11 @@ def analyze_hlo(text: str) -> dict:
                     continue
                 k = pm
                 if kind == "body":
-                    cond = while_info.get(name, (None, None))[0]
-                    trips = _trip_count(blocks[cond]["lines"]) if cond else 1
+                    trips = while_trips.get(name)
+                    if trips is None:
+                        cond = while_info.get(name, (None, None))[0]
+                        trips = (_trip_count(blocks[cond]["lines"])
+                                 if cond else 1)
                     k = pm * trips
                 m = max(m, k)
             if m > 0 and mult.get(name) != m:
@@ -187,10 +196,14 @@ def analyze_hlo(text: str) -> dict:
             if " dot(" in rhs:
                 cdim = 1
                 cm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", rhs)
-                am = re.search(r"dot\(%?([\w.\-]+)", rhs)
-                if cm and am and am.group(1) in symtab:
+                # first operand name: the first %-prefixed token inside the
+                # parens (operands carry a leading "f32[64,64]{1,0}" type,
+                # whose braces contain commas — no naive comma-splitting)
+                am = re.search(r"\bdot\([^%)]*%([\w.\-]+)", rhs)
+                lhs_name = am.group(1) if am else None
+                if cm and lhs_name in symtab:
                     lhs_dims = [int(x) for x in
-                                symtab[am.group(1)][1].split(",") if x]
+                                symtab[lhs_name][1].split(",") if x]
                     for idx in cm.group(1).split(","):
                         if idx and int(idx) < len(lhs_dims):
                             cdim *= lhs_dims[int(idx)]

@@ -26,7 +26,7 @@ def main() -> None:
     sys.stdout.flush()
     bound_convergence.main()
     sys.stdout.flush()
-    fct_bench.main()
+    fct_bench.main([])
     sys.stdout.flush()
     schedule_time.main()
     sys.stdout.flush()

@@ -7,7 +7,7 @@ import numpy as np
 
 from repro.core import traffic as T
 from repro.core.schedule import oblivious_schedule, vermilion_schedule
-from repro.core.simulator import simulate, websearch_workload
+from repro.core.simulator import SweepCase, run_sweep, websearch_workload
 from repro.core.throughput import (
     oblivious_throughput,
     theorem3_bound,
@@ -39,8 +39,10 @@ def main():
     sv = vermilion_schedule(wl.demand_matrix(), k=k, d_hat=d_hat,
                             recfg_frac=recfg, normalize="saturate")
     so = oblivious_schedule(n, d_hat=d_hat, recfg_frac=recfg)
-    rv = simulate(sv, wl, bits_per_slot)
-    ro = simulate(so, wl, bits_per_slot, mode="rotorlb")
+    # both systems batched through the sweep API in one call
+    rv, ro = (row.result for row in run_sweep(
+        [SweepCase(sv, wl, "single_hop", "vermilion"),
+         SweepCase(so, wl, "rotorlb", "rotorlb")], bits_per_slot))
     print(f"  vermilion: p99short={rv.fct_percentile(99, short_cutoff=8e5):.0f} "
           f"slots util={rv.utilization:.3f}")
     print(f"  rotorlb  : p99short={ro.fct_percentile(99, short_cutoff=8e5):.0f} "

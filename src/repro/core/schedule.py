@@ -72,12 +72,14 @@ class Schedule:
         c=1 meaning one slot's worth). Used by the simulator."""
         t, n = self.T, self.n
         out = np.zeros((self.n_slots, n, n), dtype=np.float64)
-        idx = np.arange(n)
-        for s in range(self.n_slots):
-            for j in range(s * self.d_hat, min((s + 1) * self.d_hat, t)):
-                out[s, idx, self.perms[j]] += c * (1.0 - self.recfg_frac)
-        for s in range(self.n_slots):
-            np.fill_diagonal(out[s], 0.0)
+        slot_of = np.repeat(np.arange(self.n_slots), self.d_hat)[:t]
+        np.add.at(
+            out,
+            (np.repeat(slot_of, n), np.tile(np.arange(n), t),
+             self.perms.reshape(-1)),
+            c * (1.0 - self.recfg_frac),
+        )
+        out[:, np.arange(n), np.arange(n)] = 0.0
         return out
 
 

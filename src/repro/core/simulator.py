@@ -13,16 +13,57 @@ Routing modes:
 * ``vlb``          — Sirius-style Valiant: all traffic takes two hops via
                      the currently-connected intermediates.
 
-All per-slot dynamics are vectorized over the n x n pair matrix (and the
-n^3 relay tensor for two-hop modes); flow completions are detected by
-prefix-threshold crossing, so the Python-level work per slot is O(#completions).
+Simulator architecture
+======================
+The engine is array-programmed end to end; the only Python-level loop is
+over timeslots, and a whole (schedule, workload, mode) sweep grid advances
+through one slot loop with a leading batch axis:
 
-A JAX ``lax.scan`` twin (:func:`simulate_aggregate_jax`) runs the single-hop
-aggregate dynamics accelerator-resident; parity with the numpy path is tested.
+1. **Precomputed arrival buckets.**  Flows (from every workload in the
+   batch) are concatenated and sorted by arrival slot once; each slot's
+   arrivals are a contiguous index range injected into the VOQ state with
+   one ``np.add.at``.
+
+2. **Sparse single-hop dynamics.**  A slot can only move bits over its
+   <= n * d_hat circuits, so the single-hop engine touches nothing else:
+   the periodic circuit support (pair ids + capacities, memoized per
+   period-slot residue) drives O(B n d_hat) scalar gather/min/scatter ops
+   per slot — no dense (B, n, n) work at all, and element-for-element
+   identical VOQ dynamics to the reference engine.
+
+3. **Circuit-sparse two-hop dynamics.**  rotorlb/vlb cases share one
+   dense-VOQ loop (vlb masks the direct hop), but relay work is confined
+   to the circuit support rows: maintained per-(at, dst) bucket totals
+   skip empty relay buckets, the drain/deliver/offload transfers are
+   compact (J, n) row operations (J <= B n d_hat) instead of the
+   reference's O(n^3) tensors, and grouped ``add.reduceat`` recovers the
+   per-node and per-destination reductions.
+
+4. **Offset-based water-filling.**  Per-flow processor-sharing credit
+   keeps active flows sorted by (pair, stored size) and exploits that a
+   water-fill subtracts the *same* level from every surviving flow of a
+   pair: per-pair offsets advance in O(1) (``true_rem = stored - off``),
+   the level is solved on a bounded sorted-prefix pad with an exact
+   fallback, and completions pop the sorted prefix via tombstone counters
+   with periodic compaction.  No per-pair Python loop, no dict
+   bookkeeping, and per-slot cost independent of queue depth.
+
+5. **Sweep API.**  :func:`run_sweep` takes a list of
+   ``(schedule, workload, mode)`` cases (see :class:`SweepCase`), batches
+   single-hop and two-hop groups through the engines above, so one call
+   evaluates an ``n × load × mode`` grid.  ``backend="jax"`` runs the
+   single-hop aggregate dynamics as a ``jax.lax.scan`` (utilization /
+   delivered-bits only — per-flow FCTs stay on the NumPy path).
+
+The pre-vectorization engine is kept verbatim as
+:func:`simulate_reference`; golden-trace tests pin the new engine to it on
+small instances for all three modes (exact FCT equality; aggregate
+quantities to ~ulp drift from the offset/bucket-total bookkeeping).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+import time
+from dataclasses import dataclass, field
 
 import numpy as np
 
@@ -32,7 +73,11 @@ __all__ = [
     "Workload",
     "websearch_workload",
     "SimResult",
+    "SweepCase",
+    "SweepRow",
     "simulate",
+    "simulate_reference",
+    "run_sweep",
     "simulate_aggregate_jax",
     "WEBSEARCH_CDF",
 ]
@@ -43,6 +88,8 @@ WEBSEARCH_CDF = np.array([
     (53_000, 0.60), (133_000, 0.70), (667_000, 0.80), (1_467_000, 0.90),
     (2_107_000, 0.95), (6_667_000, 0.98), (20_000_000, 1.00),
 ])
+
+_MODES = ("single_hop", "rotorlb", "vlb")
 
 
 @dataclass(frozen=True)
@@ -148,8 +195,14 @@ class SimResult:
 
     @property
     def completed_frac(self) -> float:
+        if len(self.fct_slots) == 0:
+            return float("nan")
         return float(np.isfinite(self.fct_slots).mean())
 
+
+# ---------------------------------------------------------------------------
+# Reference engine (pre-vectorization) — kept as the golden-trace oracle
+# ---------------------------------------------------------------------------
 
 class _FlowTracker:
     """Round-robin (processor-sharing) completion bookkeeping, matching the
@@ -201,20 +254,20 @@ class _FlowTracker:
             self.active[p] = still
 
 
-def simulate(
+def simulate_reference(
     sched: Schedule,
     wl: Workload,
     bits_per_slot: float,
     mode: str = "single_hop",
 ) -> SimResult:
-    """Run ``wl`` over ``sched`` for ``wl.horizon`` slots."""
+    """Run ``wl`` over ``sched`` for ``wl.horizon`` slots (scalar engine)."""
     n = wl.n
     if sched.n != n:
         raise ValueError("schedule/workload size mismatch")
     caps = sched.capacity_per_slot(bits_per_slot)  # (n_slots, n, n)
     ns = caps.shape[0]
     two_hop = mode in ("rotorlb", "vlb")
-    if mode not in ("single_hop", "rotorlb", "vlb"):
+    if mode not in _MODES:
         raise ValueError(mode)
 
     voq = np.zeros((n, n))
@@ -287,6 +340,635 @@ def simulate(
         avg_hops=1.0 + second_hop_bits / max(delivered_total, 1e-9)
         if two_hop else 1.0,
     )
+
+
+# ---------------------------------------------------------------------------
+# Vectorized batch engine
+# ---------------------------------------------------------------------------
+
+_PAD_W = 32          # water-level search depth before exact fallback
+_KEY_DT = np.dtype([("p", np.int64), ("r", np.float64)])
+
+
+def _ranged_arange(counts: np.ndarray) -> np.ndarray:
+    """[0..c0), [0..c1), ... concatenated."""
+    total = int(counts.sum())
+    out = np.arange(total)
+    starts = np.concatenate([[0], np.cumsum(counts[:-1])])
+    return out - np.repeat(starts, counts)
+
+
+class _CreditState:
+    """Processor-sharing flow-completion bookkeeping, O(pairs) per slot.
+
+    Active flows are kept in arrays sorted by (pair id, stored size).  A
+    water-fill step subtracts the same level from every surviving flow of a
+    pair, so the engine stores per-pair *offsets* instead of rewriting
+    per-flow remainders: ``true_remaining = stored - off[pair]``.  A slot
+    then costs O(1) per delivered pair (advance the offset, complete the
+    sorted prefix that sank below the level) instead of O(active flows).
+    Completions are tombstoned via per-pair skip counters and physically
+    removed in periodic compactions, which also rebase offsets before they
+    grow past float precision.
+
+    Matches :class:`_FlowTracker.credit` semantics (per pair, bits are
+    water-filled across active flows sorted by remaining size; flows
+    dropping to <= 1e-6 bits complete with ``fct = slot + 1 - arrival``)
+    up to ~ulp-level float drift from the offset representation.
+    """
+
+    def __init__(self, n_pairs: int, pid: np.ndarray, size: np.ndarray,
+                 arrival: np.ndarray, fct: np.ndarray):
+        self.pid = pid
+        self.size = size
+        self.arrival = arrival
+        self.fct = fct
+        self.off = np.zeros(n_pairs)      # per-pair water level served
+        self.psum = np.zeros(n_pairs)     # approx total remaining per pair
+        self.ctr = np.zeros(n_pairs, dtype=np.int64)   # tombstoned prefix
+        self.keys = np.empty(0, dtype=_KEY_DT)         # (pair, stored)
+        self.act = np.empty(0, dtype=np.int64)         # flow ids
+        self.dead = 0
+
+    def arrive(self, newf: np.ndarray) -> None:
+        npid = self.pid[newf]
+        stored = self.size[newf] + self.off[npid]
+        o = np.lexsort((stored, npid))
+        newf, npid, stored = newf[o], npid[o], stored[o]
+        np.add.at(self.psum, npid, self.size[newf])
+        q = np.empty(len(newf), dtype=_KEY_DT)
+        q["p"] = npid
+        q["r"] = stored
+        if self.keys.size:
+            # hand-rolled sorted insert (np.insert x2 costs several passes)
+            K, A = len(q), len(self.keys)
+            tgt = np.searchsorted(self.keys, q, side="left") + np.arange(K)
+            keys = np.empty(A + K, dtype=_KEY_DT)
+            act = np.empty(A + K, dtype=np.int64)
+            keep = np.ones(A + K, dtype=bool)
+            keep[tgt] = False
+            keys[tgt] = q
+            act[tgt] = newf
+            keys[keep] = self.keys
+            act[keep] = self.act
+            self.keys, self.act = keys, act
+        else:
+            self.keys = q
+            self.act = newf.copy()
+
+    def _compact(self) -> None:
+        alive = np.isinf(self.fct[self.act])
+        self.act = self.act[alive]
+        self.keys = self.keys[alive]
+        self.ctr[:] = 0
+        self.dead = 0
+        # rebase offsets into stored values before they swamp the mantissa
+        if self.off.max() > 1e9 and self.act.size:
+            self.keys["r"] -= self.off[self.keys["p"]]
+            self.off[:] = 0.0
+
+    def credit(self, delivered_flat: np.ndarray, slot: int) -> None:
+        pids = np.flatnonzero(delivered_flat > 1e-9)
+        self.credit_pairs(pids, delivered_flat[pids], slot)
+
+    def credit_pairs(self, pids: np.ndarray, s: np.ndarray,
+                     slot: int) -> None:
+        """Credit ``s`` bits to each (unique) pair in ``pids`` — the sparse
+        entry point for engines that know the delivered support."""
+        if not self.act.size or not pids.size:
+            return
+        keep = s > 1e-9
+        if not keep.all():
+            pids, s = pids[keep], s[keep]
+        if not pids.size:
+            return
+        kp = self.keys["p"]
+        lo = np.searchsorted(kp, pids, side="left") + self.ctr[pids]
+        hi = np.searchsorted(kp, pids, side="right")
+        m = hi - lo
+        g = m > 0
+        if not g.any():
+            return
+        pids, lo, hi, m, s = pids[g], lo[g], hi[g], m[g], s[g]
+        S = len(pids)
+        off_g = self.off[pids]
+        stored = self.keys["r"]
+
+        # exact remaining totals only where the budget might drain the pair
+        s_eff = s
+        need = np.flatnonzero(4.0 * s >= np.maximum(self.psum[pids], 0.0))
+        if need.size:
+            mm = m[need]
+            flat = np.repeat(lo[need], mm) + _ranged_arange(mm)
+            bounds = np.concatenate([[0], np.cumsum(mm[:-1])])
+            tot = (np.add.reduceat(stored[flat], bounds)
+                   - mm * off_g[need])
+            s_eff = s.copy()
+            s_eff[need] = np.minimum(s[need], tot)
+
+        # water level from the sorted prefix (true rem = stored - off)
+        W = min(_PAD_W, int(m.max()))
+        col = np.arange(W)
+        valid = col[None, :] < np.minimum(m, W)[:, None]
+        safe = np.where(valid, lo[:, None] + col[None, :], 0)
+        r_pre = np.where(valid, stored[safe] - off_g[:, None], 0.0)
+        csum = np.cumsum(r_pre, axis=1)
+        fill = csum + r_pre * (m[:, None] - 1 - col[None, :])
+        below = (fill < s_eff[:, None]) & valid
+        j = below.sum(axis=1)
+
+        full = j >= m                                  # drain: level = max
+        r_last = stored[hi - 1] - off_g
+        prev = np.where(j > 0, csum[np.arange(S), np.maximum(j - 1, 0)], 0.0)
+        level = np.where(full, r_last,
+                         (s_eff - prev) / np.maximum(m - j, 1))
+        k = ((r_pre <= (level + 1e-6)[:, None]) & valid).sum(axis=1)
+        k[full] = m[full]
+
+        # level search (or completion count) overran the pad: exact solve
+        ovf = np.flatnonzero(((j >= W) | (k >= W)) & (m > W))
+        for i in ovf:
+            r_g = stored[lo[i]:hi[i]] - off_g[i]
+            mi = int(m[i])
+            c_g = np.cumsum(r_g)
+            f_g = c_g + r_g * np.arange(mi - 1, -1, -1)
+            ji = int(np.searchsorted(f_g, s_eff[i], side="left"))
+            level[i] = (r_g[-1] if ji >= mi else
+                        (s_eff[i] - (c_g[ji - 1] if ji else 0.0)) / (mi - ji))
+            k[i] = mi if ji >= mi else int(
+                np.searchsorted(r_g, level[i] + 1e-6, side="right"))
+
+        # complete the sunken prefix, advance offsets and totals
+        self.off[pids] = off_g + level
+        self.psum[pids] = np.where(k == m, 0.0, self.psum[pids] - s_eff)
+        if k.any():
+            kc = np.minimum(k, W)
+            fmask = (col[None, :] < kc[:, None]) & valid
+            done = self.act[safe[fmask]]
+            big = np.flatnonzero(k > W)
+            if big.size:
+                ext = np.repeat(lo[big] + W, k[big] - W)                     + _ranged_arange(k[big] - W)
+                done = np.concatenate([done, self.act[ext]])
+            self.fct[done] = slot + 1 - self.arrival[done]
+            self.ctr[pids] += k
+            self.dead += int(k.sum())
+            if self.dead * 2 > len(self.act) and self.dead > 4096:
+                self._compact()
+
+
+def _support_plan(
+    caps_list: list[np.ndarray], n: int, tmap: list[int], B: int
+) -> "callable":
+    """Build a per-slot circuit-support plan provider for the two-hop cases
+    of a batch.
+
+    Per (two-hop case, period slot), the <= n*d_hat (at, dst) pairs with
+    nonzero capacity; relay drain/fill only ever touches these rows
+    (everything else is an exact multiply-by-one / add-zero), so the
+    per-slot relay work is O(n^2 d_hat), not O(n^3).  ``tmap[b2]`` maps a
+    two-hop-local case index to its global batch index: ``row``/``bv``
+    (global) address the shared cap/voq/delivered tensors; ``row_l`` /
+    ``bv_l`` (local) address the relay tensor, which only exists for
+    two-hop cases.  The merged plan for a slot depends only on
+    ``slot % ns_b`` per case, so plans are memoized on that residue tuple.
+    """
+    ns = [caps_list[g].shape[0] for g in tmap]
+    per_case: list[list[dict]] = []
+    for b2, g in enumerate(tmap):
+        plans = []
+        for ps in range(caps_list[g].shape[0]):
+            at, v = np.nonzero(caps_list[g][ps])    # lex-sorted by (at, v)
+            plans.append({
+                "J": len(at), "b": np.full(len(at), g),
+                "row": g * n + at, "v": v, "bv": g * n + v,
+                "row_l": b2 * n + at, "bv_l": b2 * n + v, "at": at,
+            })
+        per_case.append(plans)
+
+    memo: dict[tuple, dict] = {}
+    keys_cat = ("b", "row", "v", "bv", "row_l", "bv_l", "at")
+
+    def plan_for(slot: int) -> dict:
+        key = tuple(slot % p for p in ns)
+        plan = memo.get(key)
+        if plan is not None:
+            return plan
+        sd = [per_case[b2][key[b2]] for b2 in range(len(tmap))]
+        plan = {k: np.concatenate([d[k] for d in sd]) for k in keys_cat}
+        plan["J"] = int(sum(d["J"] for d in sd))
+        if len(memo) < 1024:       # bound memory for long aperiodic batches
+            memo[key] = plan
+        return plan
+
+    return plan_for
+
+
+def _concat_flows(
+    cases: list[tuple[Schedule, Workload]],
+    n: int,
+    horizons: np.ndarray,
+    H: int,
+):
+    """Concatenate the batch's flows and build the shared credit state and
+    arrival buckets (one stable sort, contiguous slices per slot; flows
+    arriving at/after their case's horizon are never injected — they are
+    excluded from offered_bits too).
+
+    Returns (f_off, pid, f_size, fct, credit, order, bucket).
+    """
+    B = len(cases)
+    f_off = np.concatenate(
+        [[0], np.cumsum([wl.num_flows for _, wl in cases])]).astype(np.int64)
+    f_item = np.concatenate(
+        [np.full(wl.num_flows, b, dtype=np.int64)
+         for b, (_, wl) in enumerate(cases)])
+    f_src = np.concatenate([wl.src for _, wl in cases]).astype(np.int64)
+    f_dst = np.concatenate([wl.dst for _, wl in cases]).astype(np.int64)
+    f_size = np.concatenate([wl.size for _, wl in cases]).astype(np.float64)
+    f_arr = np.concatenate([wl.arrival for _, wl in cases]).astype(np.int64)
+    pid = (f_item * n + f_src) * n + f_dst
+    fct = np.full(len(f_size), np.inf)
+    credit = _CreditState(B * n * n, pid, f_size, f_arr, fct)
+
+    valid = f_arr < horizons[f_item]
+    order = np.argsort(f_arr, kind="stable")
+    order = order[valid[order]]
+    bucket = np.searchsorted(f_arr[order], np.arange(H + 1))
+    return f_off, pid, f_size, fct, credit, order, bucket
+
+
+def _simulate_batch_singlehop(
+    cases: list[tuple[Schedule, Workload]],
+    bits_per_slot: float,
+) -> list[SimResult]:
+    """Sparse single-hop engine: a slot only moves bits over its <= n*d_hat
+    circuits, so the whole slot step is O(B n d_hat) scalar ops on the
+    circuit support — no dense (B, n, n) work at all.  VOQ dynamics are
+    element-for-element identical to the dense path."""
+    B = len(cases)
+    n = cases[0][1].n
+    for sched, wl in cases:
+        if wl.n != n:
+            raise ValueError("all workloads in a batch must share n")
+        if sched.n != n:
+            raise ValueError("schedule/workload size mismatch")
+    horizons = np.array([wl.horizon for _, wl in cases], dtype=np.int64)
+    H = int(horizons.max())
+
+    # circuit support per (case, period slot): pair ids + capacities
+    caps_list = [sched.capacity_per_slot(bits_per_slot) for sched, _ in cases]
+    ns = [c.shape[0] for c in caps_list]
+    per_case = []
+    for b, caps in enumerate(caps_list):
+        plans = []
+        for ps in range(caps.shape[0]):
+            at, v = np.nonzero(caps[ps])
+            plans.append({
+                "pid": (b * n + at) * n + v,
+                "cap": caps[ps][at, v],
+                "case": np.full(len(at), b, dtype=np.int64),
+            })
+        per_case.append(plans)
+    memo: dict[tuple, dict] = {}
+
+    def plan_for(slot: int) -> dict:
+        key = tuple(slot % p for p in ns)
+        plan = memo.get(key)
+        if plan is None:
+            sd = [per_case[b][key[b]] for b in range(B)]
+            plan = {k: np.concatenate([d[k] for d in sd])
+                    for k in ("pid", "cap", "case")}
+            if len(memo) < 1024:
+                memo[key] = plan
+        return plan
+
+    f_off, pid, f_size, fct, credit, order, bucket = _concat_flows(
+        cases, n, horizons, H)
+
+    voq_flat = np.zeros(B * n * n)
+    delivered_total = np.zeros(B)
+    all_live = bool(np.all(horizons == H))
+
+    for slot in range(H):
+        newf = order[bucket[slot]:bucket[slot + 1]]
+        if newf.size:
+            np.add.at(voq_flat, pid[newf], f_size[newf])
+            credit.arrive(newf)
+
+        plan = plan_for(slot)
+        spid = plan["pid"]
+        scap = plan["cap"]
+        if not all_live:
+            scap = scap * (slot < horizons[plan["case"]])
+        q = voq_flat[spid]
+        tx = np.minimum(q, scap)
+        voq_flat[spid] = q - tx
+        np.add.at(delivered_total, plan["case"], tx)
+        credit.credit_pairs(spid, tx, slot)
+
+    out = []
+    for b, (sched, wl) in enumerate(cases):
+        sl = slice(f_off[b], f_off[b + 1])
+        offered = float(wl.size[wl.arrival < wl.horizon].sum())
+        ideal = wl.horizon * n * sched.d_hat * bits_per_slot
+        out.append(SimResult(
+            fct_slots=fct[sl],
+            flow_size=wl.size,
+            utilization=float(delivered_total[b]) / ideal,
+            delivered_bits=float(delivered_total[b]),
+            offered_bits=offered,
+        ))
+    return out
+
+
+def _simulate_batch(
+    cases: list[tuple[Schedule, Workload]],
+    bits_per_slot: float,
+    modes: list[str],
+) -> list[SimResult]:
+    """Advance every (schedule, workload) case in one slot loop with a
+    leading batch axis.  Routing modes mix freely: relay state exists only
+    for the two-hop cases, and vlb cases mask out the direct hop."""
+    for m in modes:
+        if m not in _MODES:
+            raise ValueError(m)
+    B = len(cases)
+    n = cases[0][1].n
+    for sched, wl in cases:
+        if wl.n != n:
+            raise ValueError("all workloads in a batch must share n")
+        if sched.n != n:
+            raise ValueError("schedule/workload size mismatch")
+    horizons = np.array([wl.horizon for _, wl in cases], dtype=np.int64)
+    H = int(horizons.max())
+
+    # periodic capacity LUT, concatenated over cases
+    caps_list = [sched.capacity_per_slot(bits_per_slot) for sched, _ in cases]
+    ns = np.array([c.shape[0] for c in caps_list], dtype=np.int64)
+    offs = np.concatenate([[0], np.cumsum(ns[:-1])])
+    caps_flat = np.concatenate(caps_list, axis=0)
+    cap_idx = offs[:, None] + (np.arange(H)[None, :] % ns[:, None])  # (B, H)
+
+    tmap = [b for b, m in enumerate(modes) if m in ("rotorlb", "vlb")]
+    two_hop = bool(tmap)
+    if two_hop:
+        plan_for = _support_plan(caps_list, n, tmap, B)
+        direct_mask = np.array(
+            [0.0 if m == "vlb" else 1.0 for m in modes])[:, None, None]
+        all_direct = bool(np.all(direct_mask == 1.0))
+
+    f_off, pid, f_size, fct, credit, order, bucket = _concat_flows(
+        cases, n, horizons, H)
+
+    voq_flat = np.zeros(B * n * n)
+    voq = voq_flat.reshape(B, n, n)
+    # relay state only for the two-hop cases: [(b2, at), src, dst] — the
+    # offload fill then lands on contiguous rows (the strided drain
+    # gather/assign is several times cheaper than a strided fancy +=).
+    # RS maintains per-(at, dst) bucket totals so empty buckets are O(1).
+    R3 = np.zeros((len(tmap) * n, n, n)) if two_hop else None
+    RS = np.zeros((len(tmap) * n, n)) if two_hop else None
+    delivered_total = np.zeros(B)
+    second_hop_bits = np.zeros(B)
+    eps = 1e-12
+    all_live = bool(np.all(horizons == H))
+
+    for slot in range(H):
+        newf = order[bucket[slot]:bucket[slot + 1]]
+        if newf.size:
+            np.add.at(voq_flat, pid[newf], f_size[newf])
+            credit.arrive(newf)
+
+        cap = caps_flat[cap_idx[:, slot]]                # (B, n, n), fresh
+        if not all_live:
+            cap *= (slot < horizons)[:, None, None]      # finished cases idle
+        cap3 = cap.reshape(B * n, n)
+        delivered = None
+
+        p = plan_for(slot) if two_hop else None
+        have_circuits = two_hop and p["J"] > 0
+
+        if have_circuits:
+            s_row, s_v, s_rl = p["row"], p["v"], p["row_l"]
+
+            # priority 1: second-hop relay traffic (at u, destined v).  The
+            # maintained per-bucket totals RS say which circuits actually
+            # hold relayed bits, so empty buckets cost O(1), not O(n).
+            rs = RS[s_rl, s_v]                           # (J,)
+            cap_j = cap3[s_row, s_v]
+            send1 = np.minimum(rs, cap_j)
+            frac = np.where(rs > eps, send1 / np.maximum(rs, eps), 0.0)
+            ai = np.flatnonzero(frac > 0.0)
+            if ai.size:
+                rl_a, v_a = s_rl[ai], s_v[ai]
+                rel_rows = R3[rl_a, :, v_a]              # (Ja, n) over src
+                contrib = rel_rows * frac[ai, None]
+                # land bits at dst, attributed to the original (src, dst)
+                o = np.argsort(p["bv_l"][ai], kind="stable")
+                bvs = p["bv"][ai][o]
+                co = contrib[o]
+                starts = np.flatnonzero(np.r_[True, bvs[1:] != bvs[:-1]])
+                dtmp = np.zeros((B * n, n))              # [(b, dst), src]
+                dtmp[bvs[starts]] = np.add.reduceat(co, starts, axis=0)
+                delivered = np.ascontiguousarray(
+                    dtmp.reshape(B, n, n).transpose(0, 2, 1))
+                R3[rl_a, :, v_a] = rel_rows * (1.0 - frac[ai])[:, None]
+            np.add.at(second_hop_bits, p["b"], send1)
+            RS[s_rl, s_v] = rs - send1
+            cap3[s_row, s_v] = cap_j - send1
+
+        tx = np.minimum(voq, cap)
+        if two_hop and not all_direct:
+            tx *= direct_mask                            # vlb: no direct hop
+        voq -= tx
+        if delivered is None:
+            delivered = tx        # no relay bits landed: direct is everything
+        else:
+            delivered += tx
+
+        if have_circuits:
+            cap -= tx
+            # offload leftover capacity: proportional spray into relays;
+            # moved[u, v, d] = send_u * link_share[u,v] * q_share[u,d] is
+            # supported on circuit rows (u, v) with both leftover capacity
+            # and queued bits — keep it compact over just those rows
+            voq3 = voq_flat.reshape(B * n, n)
+            leftover_u = cap3.sum(axis=1)                # (B*n,)
+            queue_u = voq3.sum(axis=1)
+            send_u = np.minimum(leftover_u, queue_u)
+            lo_j = leftover_u[s_row]
+            ls_j = np.where(
+                lo_j > eps, cap3[s_row, s_v] / np.maximum(lo_j, eps), 0.0)
+            coeff = send_u[s_row] * ls_j
+            nz = np.flatnonzero(coeff > 0.0)
+            if nz.size:
+                row_z, v_z = s_row[nz], s_v[nz]
+                q_z = queue_u[row_z]
+                qs_rows = np.where(
+                    (q_z > eps)[:, None],
+                    voq3[row_z] / np.maximum(q_z, eps)[:, None], 0.0)
+                moved_c = coeff[nz][:, None] * qs_rows
+                stz = np.flatnonzero(np.r_[True, row_z[1:] != row_z[:-1]])
+                dec = np.add.reduceat(moved_c, stz, axis=0)
+                voq3[row_z[stz]] -= dec
+                np.maximum(voq, 0.0, out=voq)
+                # bits whose relay node IS the destination arrive at once
+                j_all = np.arange(len(nz))
+                delivered.reshape(B * n, n)[row_z, v_z] += moved_c[j_all, v_z]
+                moved_c[j_all, v_z] = 0.0
+                bvz, atz = p["bv_l"][nz], p["at"][nz]
+                R3[bvz, atz, :] += moved_c          # -> [at v, src u, dst]
+                np.add.at(RS, bvz, moved_c)
+
+        delivered_total += delivered.sum(axis=(1, 2))
+        credit.credit(delivered.reshape(-1), slot)
+
+    out = []
+    for b, (sched, wl) in enumerate(cases):
+        sl = slice(f_off[b], f_off[b + 1])
+        offered = float(wl.size[wl.arrival < wl.horizon].sum())
+        ideal = wl.horizon * n * sched.d_hat * bits_per_slot
+        case_two_hop = modes[b] in ("rotorlb", "vlb")
+        out.append(SimResult(
+            fct_slots=fct[sl],
+            flow_size=wl.size,
+            utilization=float(delivered_total[b]) / ideal,
+            delivered_bits=float(delivered_total[b]),
+            offered_bits=offered,
+            avg_hops=1.0 + float(second_hop_bits[b])
+            / max(float(delivered_total[b]), 1e-9) if case_two_hop else 1.0,
+        ))
+    return out
+
+
+def simulate(
+    sched: Schedule,
+    wl: Workload,
+    bits_per_slot: float,
+    mode: str = "single_hop",
+) -> SimResult:
+    """Run ``wl`` over ``sched`` for ``wl.horizon`` slots (vectorized)."""
+    if mode == "single_hop":
+        return _simulate_batch_singlehop([(sched, wl)], bits_per_slot)[0]
+    return _simulate_batch([(sched, wl)], bits_per_slot, [mode])[0]
+
+
+# ---------------------------------------------------------------------------
+# Sweep API
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class SweepCase:
+    """One (schedule, workload, mode) point of a sweep grid."""
+    sched: Schedule
+    wl: Workload
+    mode: str = "single_hop"
+    label: str = ""
+    meta: dict = field(default_factory=dict)
+
+
+@dataclass
+class SweepRow:
+    label: str
+    mode: str
+    result: SimResult
+    meta: dict
+    sim_s: float          # batch wall time amortized over the batch
+
+
+def run_sweep(
+    cases: list[SweepCase],
+    bits_per_slot: float,
+    backend: str = "numpy",
+) -> list[SweepRow]:
+    """Evaluate a grid of simulation cases, batching within engine kind.
+
+    Single-hop cases (per node count) advance through one sparse batched
+    slot loop, two-hop cases (``rotorlb`` / ``vlb`` mix freely) through one
+    dense-relay loop; results come back in input order.  With
+    ``backend="jax"``, single-hop cases run the aggregate VOQ dynamics as a
+    ``jax.lax.scan`` on the accelerator — utilization and delivered bits
+    only, ``fct_slots`` is all-inf (use the NumPy backend for FCTs).
+    """
+    if backend not in ("numpy", "jax"):
+        raise ValueError(backend)
+    groups: dict[tuple, list[int]] = {}
+    for i, c in enumerate(cases):
+        if c.mode not in _MODES:
+            raise ValueError(c.mode)
+        groups.setdefault((c.wl.n, c.mode == "single_hop"), []).append(i)
+    rows: list[SweepRow | None] = [None] * len(cases)
+    for (_, single), idxs in groups.items():
+        batch = [(cases[i].sched, cases[i].wl) for i in idxs]
+        modes = [cases[i].mode for i in idxs]
+        t0 = time.perf_counter()
+        if single and backend == "jax":
+            results = _aggregate_batch_jax(batch, bits_per_slot)
+        elif single:
+            results = _simulate_batch_singlehop(batch, bits_per_slot)
+        else:
+            results = _simulate_batch(batch, bits_per_slot, modes)
+        dt = (time.perf_counter() - t0) / len(idxs)
+        for i, r in zip(idxs, results):
+            rows[i] = SweepRow(label=cases[i].label, mode=cases[i].mode,
+                               result=r, meta=dict(cases[i].meta), sim_s=dt)
+    return rows  # type: ignore[return-value]
+
+
+def _aggregate_batch_jax(
+    cases: list[tuple[Schedule, Workload]], bits_per_slot: float
+) -> list[SimResult]:
+    """Single-hop aggregate dynamics for a batch via ``jax.lax.scan``.
+
+    Flow-completion times are not tracked (fct_slots all inf); delivered
+    bits / utilization match the NumPy engine.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    B = len(cases)
+    n = cases[0][1].n
+    horizons = np.array([wl.horizon for _, wl in cases], dtype=np.int64)
+    H = int(horizons.max())
+    caps_list = [sched.capacity_per_slot(bits_per_slot) for sched, _ in cases]
+    ns = np.array([c.shape[0] for c in caps_list], dtype=np.int64)
+    offs = np.concatenate([[0], np.cumsum(ns[:-1])])
+    caps_flat = jnp.asarray(np.concatenate(caps_list, axis=0), jnp.float32)
+    cap_idx = jnp.asarray(
+        (offs[:, None] + (np.arange(H)[None, :] % ns[:, None])).T)  # (H, B)
+    live = jnp.asarray(
+        (np.arange(H)[:, None] < horizons[None, :]).astype(np.float32))
+
+    arr = np.zeros((H, B, n, n), dtype=np.float32)
+    for b, (_, wl) in enumerate(cases):
+        ok = wl.arrival < wl.horizon
+        np.add.at(arr, (wl.arrival[ok], b, wl.src[ok], wl.dst[ok]),
+                  wl.size[ok])
+    arr = jnp.asarray(arr)
+
+    def step(voq, inp):
+        idx, a, lv = inp
+        voq = voq + a
+        cap = caps_flat[idx] * lv[:, None, None]
+        tx = jnp.minimum(voq, cap)
+        return voq - tx, tx.sum(axis=(1, 2))
+
+    _, delivered = jax.lax.scan(
+        step, jnp.zeros((B, n, n), jnp.float32), (cap_idx, arr, live))
+    delivered_total = np.asarray(delivered.sum(axis=0), np.float64)
+
+    out = []
+    for b, (sched, wl) in enumerate(cases):
+        offered = float(wl.size[wl.arrival < wl.horizon].sum())
+        ideal = wl.horizon * n * sched.d_hat * bits_per_slot
+        out.append(SimResult(
+            fct_slots=np.full(wl.num_flows, np.inf),
+            flow_size=wl.size,
+            utilization=float(delivered_total[b]) / ideal,
+            delivered_bits=float(delivered_total[b]),
+            offered_bits=offered,
+        ))
+    return out
 
 
 def simulate_aggregate_jax(

@@ -1,7 +1,8 @@
 """Regular multigraph -> perfect matching decomposition."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from conftest import given, settings, st  # hypothesis or offline fallback
 
 from repro.core.matching import (
     decompose_matchings,
@@ -60,6 +61,15 @@ def test_is_regular():
 @settings(max_examples=40, deadline=None)
 @given(st.integers(2, 12), st.integers(1, 10), st.integers(0, 10_000))
 def test_decompose_hypothesis(n, d, seed):
+    rng = np.random.default_rng(seed)
+    e = random_regular(n, d, rng)
+    _check(e, decompose_matchings(e))
+    _check(e, decompose_matchings_euler(e))
+
+
+@pytest.mark.parametrize("n,d,seed", [(2, 1, 7), (5, 4, 11), (12, 9, 13)])
+def test_decompose_deterministic_sweep(n, d, seed):
+    """Fixed-seed stand-in for the hypothesis sweep (offline runs)."""
     rng = np.random.default_rng(seed)
     e = random_regular(n, d, rng)
     _check(e, decompose_matchings(e))

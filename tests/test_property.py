@@ -1,6 +1,8 @@
 """Property-based (hypothesis) tests of the system's core invariants."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+from conftest import given, settings, st  # hypothesis or offline fallback
 
 from repro.core import traffic as T
 from repro.core.schedule import vermilion_emulated_topology, vermilion_schedule
@@ -48,3 +50,17 @@ def test_throughput_scale_invariance(n, seed, k):
     t1 = vermilion_throughput(m, k=k, seed=seed)
     t2 = vermilion_throughput(3.7 * m, k=k, seed=seed)
     assert abs(t1 - t2) < 1e-6
+
+
+@pytest.mark.parametrize("n,k,seed", [(4, 2, 0), (9, 3, 17), (14, 4, 101)])
+def test_core_invariants_deterministic(n, k, seed):
+    """Fixed-seed stand-in for the hypothesis sweeps (offline runs):
+    Theorem 3 bound, k*n-regularity, and any-to-any connectivity."""
+    m = T.random_hose(n, seed=seed, density=0.6)
+    th = vermilion_throughput(m, k=k, d_hat=1, seed=seed)
+    assert th >= theorem3_bound(k) - 1e-9
+    e = vermilion_emulated_topology(m, k=k, seed=seed)
+    assert (e.sum(axis=1) == k * n).all()
+    assert (e.sum(axis=0) == k * n).all()
+    counts = vermilion_schedule(m, k=k, seed=seed).edge_counts()
+    assert ((counts + np.eye(n, dtype=int)) > 0).all()

@@ -1,7 +1,8 @@
 """Matrix rounding (Bacharach): exactness, sums, hypothesis sweeps."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from conftest import given, settings, st  # hypothesis or offline fallback
 
 from repro.core.rounding import round_matrix, check_rounding
 from repro.core.traffic import random_hose
@@ -62,5 +63,17 @@ def test_rounding_properties_hypothesis(n, seed, density):
     r = round_matrix(a)
     check_rounding(a, r)
     # exact entry bracketing
+    assert (r >= np.floor(a - 1e-9)).all()
+    assert (r <= np.ceil(a + 1e-9)).all()
+
+
+@pytest.mark.parametrize("n,seed,density", [(2, 3, 0.1), (7, 42, 0.5),
+                                            (12, 777, 0.95)])
+def test_rounding_properties_deterministic(n, seed, density):
+    """Fixed-seed stand-in for the hypothesis sweep (offline runs)."""
+    rng = np.random.default_rng(seed)
+    a = rng.exponential(1.7, size=(n, n)) * (rng.random((n, n)) < density)
+    r = round_matrix(a)
+    check_rounding(a, r)
     assert (r >= np.floor(a - 1e-9)).all()
     assert (r <= np.ceil(a + 1e-9)).all()

@@ -1,12 +1,16 @@
-"""Flow-level simulator: conservation, FCT sanity, mode ordering, JAX parity."""
+"""Flow-level simulator: conservation, FCT sanity, mode ordering, JAX parity,
+golden traces of the vectorized engine against the reference engine."""
 import numpy as np
 import pytest
 
 from repro.core.schedule import oblivious_schedule, vermilion_schedule
 from repro.core.simulator import (
+    SweepCase,
     Workload,
+    run_sweep,
     simulate,
     simulate_aggregate_jax,
+    simulate_reference,
     websearch_workload,
 )
 
@@ -103,3 +107,75 @@ def test_percentiles_api():
     p_all = r.fct_percentile(99)
     p_short = r.fct_percentile(99, short_cutoff=8e5)
     assert np.isfinite(p_all) and np.isfinite(p_short)
+
+
+# ---------------------------------------------------------------------------
+# Golden traces: vectorized engine vs the pre-vectorization reference
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["single_hop", "rotorlb", "vlb"])
+@pytest.mark.parametrize("seed", [0, 3, 7])
+def test_golden_trace_vs_reference(mode, seed):
+    wl = websearch_workload(10, 0.45, 400, BPS, d_hat=2, seed=seed)
+    if mode == "single_hop":
+        s = vermilion_schedule(wl.demand_matrix(), k=3, d_hat=2,
+                               recfg_frac=RECFG, seed=seed)
+    else:
+        s = oblivious_schedule(10, d_hat=2, recfg_frac=RECFG)
+    a = simulate_reference(s, wl, BPS, mode=mode)
+    b = simulate(s, wl, BPS, mode=mode)
+    assert np.array_equal(a.fct_slots, b.fct_slots)
+    assert np.isclose(a.delivered_bits, b.delivered_bits, rtol=1e-6)
+    assert np.isclose(a.avg_hops, b.avg_hops, rtol=1e-6)
+
+
+@pytest.mark.parametrize("mode", ["single_hop", "rotorlb"])
+def test_golden_trace_overloaded(mode):
+    """Deep queues exercise the offset bookkeeping and pad fallback."""
+    wl = websearch_workload(6, 2.5, 500, BPS, d_hat=1, seed=0)
+    s = oblivious_schedule(6, d_hat=1, recfg_frac=RECFG)
+    a = simulate_reference(s, wl, BPS, mode=mode)
+    b = simulate(s, wl, BPS, mode=mode)
+    assert np.array_equal(a.fct_slots, b.fct_slots)
+    assert np.isclose(a.delivered_bits, b.delivered_bits, rtol=1e-6)
+
+
+def test_run_sweep_matches_per_case_simulate():
+    """One batched sweep across modes reproduces per-case results."""
+    wl = websearch_workload(8, 0.4, 300, BPS, d_hat=2, seed=5)
+    sv = vermilion_schedule(wl.demand_matrix(), k=3, d_hat=2,
+                            recfg_frac=RECFG)
+    so = oblivious_schedule(8, d_hat=2, recfg_frac=RECFG)
+    cases = [SweepCase(sv, wl, "single_hop", "v"),
+             SweepCase(so, wl, "rotorlb", "r"),
+             SweepCase(so, wl, "vlb", "l"),
+             SweepCase(so, wl, "single_hop", "o")]
+    rows = run_sweep(cases, BPS)
+    assert [r.label for r in rows] == ["v", "r", "l", "o"]
+    for c, r in zip(cases, rows):
+        ref = simulate_reference(c.sched, c.wl, BPS, mode=c.mode)
+        assert np.array_equal(ref.fct_slots, r.result.fct_slots), c.label
+        assert np.isclose(ref.delivered_bits, r.result.delivered_bits,
+                          rtol=1e-6)
+
+
+def test_run_sweep_jax_backend_aggregates():
+    """backend='jax' reproduces the numpy aggregate (no FCTs tracked)."""
+    wl = websearch_workload(6, 0.3, 200, BPS, d_hat=2, seed=2)
+    s = vermilion_schedule(wl.demand_matrix(), k=3, d_hat=2,
+                           recfg_frac=RECFG)
+    cases = [SweepCase(s, wl, "single_hop", "v")]
+    r_np = run_sweep(cases, BPS)[0].result
+    r_jx = run_sweep(cases, BPS, backend="jax")[0].result
+    assert np.isclose(r_np.delivered_bits, r_jx.delivered_bits, rtol=1e-5)
+    assert not np.isfinite(r_jx.fct_slots).any()
+
+
+def test_completed_frac_monotone_in_capacity():
+    """More bits per slot never completes fewer flows."""
+    wl = websearch_workload(8, 0.6, 400, BPS, d_hat=2, seed=2)
+    s = vermilion_schedule(wl.demand_matrix(), k=3, d_hat=2,
+                          recfg_frac=RECFG)
+    fracs = [simulate(s, wl, scale * BPS).completed_frac
+             for scale in (0.25, 0.5, 1.0, 2.0, 4.0)]
+    assert all(b >= a - 1e-12 for a, b in zip(fracs, fracs[1:])), fracs
