@@ -4,6 +4,7 @@ Prints ``name,us_per_call,derived`` CSV.  Sections:
   - throughput_fig7     (Fig 7: throughput across demand matrices)
   - bound_fig8a/b       (Fig 8: convergence to (k-1)/k)
   - fct_fig5            (Fig 5/6: FCT + utilization, websearch)
+  - adaptive            (closed estimation->schedule loop, phase shifts)
   - schedule_time_fig10 (Fig 10: schedule computation latency)
   - interconnect        (DESIGN.md §7: pod-axis collective pricing)
   - roofline            (per-cell analytic three-term summary)
@@ -15,6 +16,7 @@ import sys
 
 def main() -> None:
     from . import (
+        adaptive_bench,
         bound_convergence,
         fct_bench,
         interconnect_bench,
@@ -27,6 +29,8 @@ def main() -> None:
     bound_convergence.main()
     sys.stdout.flush()
     fct_bench.main([])
+    sys.stdout.flush()
+    adaptive_bench.main([])
     sys.stdout.flush()
     schedule_time.main()
     sys.stdout.flush()

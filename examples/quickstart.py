@@ -7,7 +7,14 @@ import numpy as np
 
 from repro.core import traffic as T
 from repro.core.schedule import oblivious_schedule, vermilion_schedule
-from repro.core.simulator import SweepCase, run_sweep, websearch_workload
+from repro.core.simulator import (
+    AdaptiveCase,
+    SweepCase,
+    phase_shifting_workload,
+    run_adaptive,
+    run_sweep,
+    websearch_workload,
+)
 from repro.core.throughput import (
     oblivious_throughput,
     theorem3_bound,
@@ -47,6 +54,24 @@ def main():
           f"slots util={rv.utilization:.3f}")
     print(f"  rotorlb  : p99short={ro.fct_percentile(99, short_cutoff=8e5):.0f} "
           f"slots util={ro.utilization:.3f} hops={ro.avg_hops:.2f}")
+
+    print("=== 4. Closed-loop adaptive scheduling (Appendix A) ===")
+    # traffic shifts permutation -> uniform mid-run; the adaptive policy
+    # re-estimates each epoch (EWMA + quantized AllGather) and hot-swaps
+    # the schedule, the stale policy keeps its epoch-0 schedule forever
+    wp = phase_shifting_workload(n, 0.5, 2000, bits_per_slot, d_hat=d_hat,
+                                 seed=0, phases=("permutation", "uniform"),
+                                 shift_period=1000)
+    ra, rs = run_adaptive(
+        [AdaptiveCase(wp, 200, "adaptive", d_hat=d_hat, recfg_frac=recfg,
+                      alpha=0.5, label="adaptive"),
+         AdaptiveCase(wp, 200, "stale", d_hat=d_hat, recfg_frac=recfg,
+                      label="stale")], bits_per_slot)
+    for row in (ra, rs):
+        u = row.epoch_utilization
+        print(f"  {row.label:8s}: util={row.result.utilization:.3f} "
+              f"(pre-shift {u[:5].mean():.3f}, post-shift {u[5:].mean():.3f})"
+              f" recomputes={row.recomputes}")
 
 
 if __name__ == "__main__":

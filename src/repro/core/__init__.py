@@ -14,6 +14,8 @@ from .traffic import (
     dlrm_data_parallel,
     dlrm_hybrid_parallel,
     random_hose,
+    pattern_matrix,
+    phase_train,
 )
 from .rounding import round_matrix, check_rounding
 from .matching import (
@@ -44,11 +46,24 @@ from .throughput import (
 from .simulator import (
     Workload,
     websearch_workload,
+    phase_shifting_workload,
     SimResult,
+    SweepCase,
+    SweepRow,
+    AdaptiveCase,
+    AdaptiveRow,
     simulate,
+    run_sweep,
+    run_adaptive,
     simulate_aggregate_jax,
 )
-from .estimation import TrafficEstimator, allgather_rows, quantize_row
+from .estimation import (
+    TrafficEstimator,
+    allgather_rows,
+    dequantize,
+    estimate_global_matrix,
+    quantize_row,
+)
 from .collectives import (
     ring_allreduce_traffic,
     all_to_all_traffic,

@@ -16,7 +16,13 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-__all__ = ["TrafficEstimator", "allgather_rows", "quantize_row"]
+__all__ = [
+    "TrafficEstimator",
+    "allgather_rows",
+    "dequantize",
+    "estimate_global_matrix",
+    "quantize_row",
+]
 
 
 def quantize_row(
@@ -73,20 +79,43 @@ class TrafficEstimator:
         return self.ewma
 
 
+def dequantize(q: np.ndarray, k: int, bits_per_slot: float) -> np.ndarray:
+    """Invert :func:`quantize_row`'s scaling (up to the floor): quantized
+    counts are in units of ``bits_per_slot * k/(k-1)`` bits."""
+    return q.astype(np.float64) * (bits_per_slot * k / (k - 1))
+
+
 def estimate_global_matrix(
     per_node_period_bits: np.ndarray,
     estimators: list[TrafficEstimator],
     k: int,
     bits_per_slot: float,
+    steps: int | None = None,
+    leader: int = 0,
 ) -> np.ndarray:
-    """One full estimation round: EWMA update, quantize, AllGather;
-    returns the consistent global matrix every node ends up with."""
+    """One full estimation round: EWMA update, quantize, AllGather,
+    dequantize.  Returns the global matrix in the *input's* units (bits):
+    quantized uint16 counts are rescaled by ``bits_per_slot * k/(k-1)`` so a
+    consumer (``vermilion_schedule``) sees demand on the same scale it was
+    measured, not raw quantizer ticks.
+
+    ``steps``: AllGather slots actually executed (default: the full n-1).
+    With a *complete* gather every node ends up with the identical matrix
+    (checked explicitly — a mismatch means the exchange model is broken).
+    With a *partial* gather (``steps < n-1``, mid-phase failure) views
+    differ; we return ``leader``'s view, whose missing rows are zero — the
+    stale/partial information a real node would act on.
+    """
     n = len(estimators)
     rows = np.stack([
         quantize_row(est.update(per_node_period_bits[i]), k, bits_per_slot)
         for i, est in enumerate(estimators)
     ])
-    views = allgather_rows(rows)
-    # all views identical after a complete phase
-    assert (views == views[0]).all()
-    return views[0].astype(np.float64)
+    views = allgather_rows(rows, steps=steps)
+    if steps is None or steps >= n - 1:
+        # all views identical after a complete phase
+        if (views != views[0]).any():
+            raise RuntimeError(
+                "AllGather views disagree after a complete phase"
+            )
+    return dequantize(views[leader], k, bits_per_slot)

@@ -55,9 +55,9 @@ class Schedule:
     def edge_counts(self) -> np.ndarray:
         """(n, n) count of circuit appearances per period (self-loops kept)."""
         c = np.zeros((self.n, self.n), dtype=np.int64)
-        idx = np.arange(self.n)
-        for p in self.perms:
-            c[idx, p] += 1
+        np.add.at(
+            c, (np.tile(np.arange(self.n), self.T), self.perms.reshape(-1)), 1
+        )
         return c
 
     def emulated_capacity(self, c: float = 1.0) -> np.ndarray:
@@ -233,6 +233,12 @@ def bvn_decompose(
     """Birkhoff-von Neumann: doubly-stochastic m = sum_i lam_i P_i.
 
     Returns (lams, perms). Up to (n-1)^2 + 1 terms.
+
+    ``saturate`` only Sinkhorn-*approximates* double stochasticity, so the
+    residual's support can lose its perfect matching once the remaining mass
+    is down to the projection slack.  Decomposition then terminates
+    gracefully (the leftover mass is below the Sinkhorn tolerance) instead
+    of raising.
     """
     m = saturate(np.asarray(m, dtype=np.float64))
     n = m.shape[0]
@@ -241,8 +247,13 @@ def bvn_decompose(
     cap = max_terms or (n * n)
     while resid.max() > tol and len(lams) < cap:
         support = (resid > tol).astype(np.int64)
-        # regular-ish support: perfect matching exists for doubly stochastic
-        perm = extract_perfect_matching(support * (n + 1))
+        # regular-ish support: perfect matching exists for exactly doubly
+        # stochastic residuals (Birkhoff); near-doubly-stochastic ones can
+        # run dry once only projection slack remains
+        try:
+            perm = extract_perfect_matching(support * (n + 1))
+        except ValueError:
+            break
         lam = float(resid[np.arange(n), perm].min())
         if lam <= tol:
             break

@@ -55,6 +55,15 @@ through one slot loop with a leading batch axis:
    single-hop aggregate dynamics as a ``jax.lax.scan`` (utilization /
    delivered-bits only — per-flow FCTs stay on the NumPy path).
 
+6. **Adaptive epoch layer.**  :func:`run_adaptive` (see
+   :class:`AdaptiveCase`) closes the paper's estimation→schedule control
+   loop on top of the per-slot engine: the horizon is partitioned into
+   epochs, per-node VOQ byte counters harvested at each boundary feed the
+   Appendix-A pipeline (EWMA → quantize → ring-AllGather → dequantize),
+   and the recomputed ``vermilion_schedule`` is hot-swapped without
+   resetting VOQ or flow state.  :func:`phase_shifting_workload` generates
+   the non-stationary (phase-train) traffic that exercises it.
+
 The pre-vectorization engine is kept verbatim as
 :func:`simulate_reference`; golden-trace tests pin the new engine to it on
 small instances for all three modes (exact FCT equality; aggregate
@@ -67,17 +76,23 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from .schedule import Schedule
+from .estimation import TrafficEstimator, estimate_global_matrix
+from .schedule import Schedule, oblivious_schedule, vermilion_schedule
+from .traffic import phase_train
 
 __all__ = [
     "Workload",
     "websearch_workload",
+    "phase_shifting_workload",
     "SimResult",
     "SweepCase",
     "SweepRow",
+    "AdaptiveCase",
+    "AdaptiveRow",
     "simulate",
     "simulate_reference",
     "run_sweep",
+    "run_adaptive",
     "simulate_aggregate_jax",
     "WEBSEARCH_CDF",
 ]
@@ -162,6 +177,64 @@ def websearch_workload(
             dsts.append(np.where(d >= s, d + 1, d))
         else:
             raise ValueError(pattern)
+    order = np.argsort(np.concatenate(arrs), kind="stable")
+    return Workload(
+        src=np.concatenate(srcs)[order].astype(np.int64),
+        dst=np.concatenate(dsts)[order].astype(np.int64),
+        size=np.concatenate(sizes)[order],
+        arrival=np.concatenate(arrs)[order].astype(np.int64),
+        n=n,
+        horizon=horizon,
+    )
+
+
+def phase_shifting_workload(
+    n: int,
+    load: float,
+    horizon: int,
+    bits_per_slot: float,
+    d_hat: int = 1,
+    seed: int = 0,
+    phases: tuple[str, ...] = ("permutation", "uniform", "dlrm"),
+    shift_period: int | None = None,
+) -> Workload:
+    """Non-stationary websearch traffic: the destination pattern follows a
+    phase train (see :func:`repro.core.traffic.phase_train`), shifting every
+    ``shift_period`` slots (default: the horizon split evenly across the
+    phases, cycling if it is longer).
+
+    Within a phase with hose-normalized demand matrix ``m``, node ``s``
+    opens Poisson flow arrivals at ``load * rowsum(m)[s]`` of its egress
+    capacity (``d_hat * bits_per_slot``/slot), websearch flow sizes, and
+    destinations drawn from ``m[s]``'s profile — so the *offered* matrix of
+    each phase tracks its demand matrix while flow-level burstiness stays.
+    """
+    rng = np.random.default_rng(seed)
+    mean_size = float(np.mean(_sample_websearch(rng, 20000)))
+    if shift_period is None:
+        shift_period = -(-horizon // len(phases))
+    if shift_period <= 0:
+        raise ValueError("shift_period must be positive")
+    mats = phase_train(n, tuple(phases), seed=seed)
+    srcs, dsts, sizes, arrs = [], [], [], []
+    for t0 in range(0, horizon, shift_period):
+        t1 = min(t0 + shift_period, horizon)
+        m = mats[(t0 // shift_period) % len(mats)]
+        row_tot = m.sum(axis=1)
+        for s in range(n):
+            if row_tot[s] <= 0:
+                continue
+            lam = load * d_hat * bits_per_slot * row_tot[s] / mean_size
+            kf = int(rng.poisson(lam * (t1 - t0)))
+            if kf == 0:
+                continue
+            srcs.append(np.full(kf, s))
+            arrs.append(rng.integers(t0, t1, size=kf))
+            sizes.append(_sample_websearch(rng, kf))
+            dsts.append(rng.choice(n, size=kf, p=m[s] / row_tot[s]))
+    if not srcs:
+        srcs, dsts = [np.empty(0, np.int64)], [np.empty(0, np.int64)]
+        sizes, arrs = [np.empty(0)], [np.empty(0, np.int64)]
     order = np.argsort(np.concatenate(arrs), kind="stable")
     return Workload(
         src=np.concatenate(srcs)[order].astype(np.int64),
@@ -913,6 +986,218 @@ def run_sweep(
             rows[i] = SweepRow(label=cases[i].label, mode=cases[i].mode,
                                result=r, meta=dict(cases[i].meta), sim_s=dt)
     return rows  # type: ignore[return-value]
+
+
+# ---------------------------------------------------------------------------
+# Adaptive epoch-driven scheduling (closed estimation -> schedule loop)
+# ---------------------------------------------------------------------------
+
+_POLICIES = ("adaptive", "oracle", "stale", "oblivious")
+
+
+def _quantizer_unit(
+    epoch_slots: int, k: int, d_hat: int, bits_per_slot: float
+) -> float:
+    """Quantization unit for an epoch's VOQ byte counters.
+
+    A1's quantizer clips at 65535 ticks; raw epoch totals reach
+    ``epoch_slots * d_hat`` slot-equivalents, which for long epochs would
+    saturate silently and flatten the estimate toward uniform.  Coarsen the
+    unit just enough that one epoch at line rate stays representable —
+    the schedule is scale-invariant, so resolution is all that changes.
+    """
+    full_ticks = epoch_slots * d_hat * k / (k - 1)
+    return bits_per_slot * max(1.0, full_ticks / 65535.0)
+
+
+@dataclass(frozen=True)
+class AdaptiveCase:
+    """One closed-loop simulation case for :func:`run_adaptive`.
+
+    ``policy``:
+      * ``"adaptive"``  — cold-start on the oblivious round-robin, then at
+        every epoch boundary run the Appendix-A estimation round over the
+        epoch's VOQ byte counters and hot-swap to the recomputed
+        ``vermilion_schedule``.
+      * ``"oracle"``    — clairvoyant: recompute each epoch from the *next*
+        epoch's true offered matrix (upper bound for any estimator).
+      * ``"stale"``     — the oracle schedule of epoch 0, never recomputed
+        (what an open control loop actually ships).
+      * ``"oblivious"`` — round-robin baseline, never recomputed.
+
+    ``gather_steps``: AllGather slots executed per estimation round; fewer
+    than ``n - 1`` models a partial (mid-phase-failure) gather whose missing
+    rows are zero at the deciding node.
+
+    ``oracle_demand``: optional (n_epochs, n, n) true demand-*rate*
+    matrices for the oracle/stale policies (e.g. the generating phase-train
+    matrices).  Without it they fall back to each epoch's realized offered
+    matrix, which carries the heavy-tailed flow-size sampling noise an
+    actual oracle of the rates would not see.
+    """
+
+    wl: Workload
+    epoch_slots: int
+    policy: str = "adaptive"
+    k: int = 3
+    d_hat: int = 1
+    recfg_frac: float = 0.0
+    alpha: float = 0.3                # EWMA weight of the newest epoch
+    gather_steps: int | None = None
+    normalize: str = "hose"
+    seed: int = 0
+    oracle_demand: np.ndarray | None = None
+    label: str = ""
+    meta: dict = field(default_factory=dict)
+
+
+@dataclass
+class AdaptiveRow:
+    label: str
+    policy: str
+    result: SimResult
+    epoch_utilization: np.ndarray   # (n_epochs,) delivered / epoch capacity
+    epoch_estimate_tv: np.ndarray   # (n_epochs,) estimate-vs-truth total-
+                                    # variation distance (nan if no estimate)
+    recomputes: int                 # schedule hot-swaps performed
+    sim_s: float
+    meta: dict
+
+
+def _run_adaptive_case(case: AdaptiveCase, bits_per_slot: float) -> AdaptiveRow:
+    if case.policy not in _POLICIES:
+        raise ValueError(case.policy)
+    if case.epoch_slots <= 0:
+        raise ValueError("epoch_slots must be positive")
+    wl, n = case.wl, case.wl.n
+    E, H = case.epoch_slots, wl.horizon
+    n_epochs = -(-H // E)
+
+    # flow state shared across epochs — a schedule hot-swap never resets it
+    pid = (wl.src * n + wl.dst).astype(np.int64)
+    f_size = wl.size.astype(np.float64)
+    fct = np.full(wl.num_flows, np.inf)
+    credit = _CreditState(n * n, pid, f_size, wl.arrival, fct)
+    valid = wl.arrival < H
+    order = np.argsort(wl.arrival, kind="stable")
+    order = order[valid[order]]
+    bucket = np.searchsorted(wl.arrival[order], np.arange(H + 1))
+    voq = np.zeros(n * n)
+
+    # true per-epoch offered matrices (oracle policy + estimate-error metric)
+    true_epoch = np.zeros((n_epochs, n, n))
+    np.add.at(true_epoch,
+              (wl.arrival[order] // E, wl.src[order], wl.dst[order]),
+              f_size[order])
+    oracle_m = case.oracle_demand
+    if oracle_m is not None and oracle_m.shape != (n_epochs, n, n):
+        raise ValueError(
+            f"oracle_demand shape {oracle_m.shape} != {(n_epochs, n, n)}")
+    if oracle_m is None:
+        oracle_m = true_epoch / E
+
+    # per-node VOQ byte counters, accumulated over the running epoch (A2)
+    counters = np.zeros((n, n))
+    ests = [TrafficEstimator(n=n, alpha=case.alpha) for _ in range(n)]
+    q_unit = _quantizer_unit(E, case.k, case.d_hat, bits_per_slot)
+
+    def support_plans(sched: Schedule) -> list[tuple[np.ndarray, np.ndarray]]:
+        caps = sched.capacity_per_slot(bits_per_slot)
+        out = []
+        for ps in range(caps.shape[0]):
+            at, v = np.nonzero(caps[ps])
+            out.append((at * n + v, caps[ps][at, v]))
+        return out
+
+    def vsched(m: np.ndarray, seed: int) -> Schedule:
+        return vermilion_schedule(
+            m, k=case.k, d_hat=case.d_hat, recfg_frac=case.recfg_frac,
+            seed=seed, normalize=case.normalize)
+
+    if case.policy in ("oracle", "stale"):
+        sched = vsched(oracle_m[0], case.seed)
+    else:  # adaptive cold start (no estimate yet) and oblivious baseline
+        sched = oblivious_schedule(n, d_hat=case.d_hat,
+                                   recfg_frac=case.recfg_frac)
+    plans = support_plans(sched)
+    sched_t0 = 0                    # slot the current schedule was installed
+
+    delivered_ep = np.zeros(n_epochs)
+    est_tv = np.full(n_epochs, np.nan)
+    recomputes = 0
+
+    for slot in range(H):
+        if slot and slot % E == 0:
+            epoch = slot // E
+            swap = None
+            if case.policy == "adaptive":
+                est = estimate_global_matrix(
+                    counters, ests, case.k, q_unit,
+                    steps=case.gather_steps)
+                t = true_epoch[epoch - 1]
+                if est.sum() > 0 and t.sum() > 0:
+                    est_tv[epoch - 1] = 0.5 * np.abs(
+                        est / est.sum() - t / t.sum()).sum()
+                if est.sum() > 0:
+                    swap = vsched(est, case.seed + epoch)
+            elif case.policy == "oracle":
+                if oracle_m[epoch].sum() > 0:
+                    swap = vsched(oracle_m[epoch], case.seed + epoch)
+            if swap is not None:
+                sched, plans, sched_t0 = swap, support_plans(swap), slot
+                recomputes += 1
+            counters[:] = 0.0
+
+        newf = order[bucket[slot]:bucket[slot + 1]]
+        if newf.size:
+            np.add.at(voq, pid[newf], f_size[newf])
+            np.add.at(counters, (wl.src[newf], wl.dst[newf]), f_size[newf])
+            credit.arrive(newf)
+
+        spid, scap = plans[(slot - sched_t0) % len(plans)]
+        q = voq[spid]
+        tx = np.minimum(q, scap)
+        voq[spid] = q - tx
+        delivered_ep[slot // E] += tx.sum()
+        credit.credit_pairs(spid, tx, slot)
+
+    ep_len = np.minimum(E, H - E * np.arange(n_epochs))
+    ep_cap = ep_len * n * case.d_hat * bits_per_slot
+    ideal = H * n * case.d_hat * bits_per_slot
+    result = SimResult(
+        fct_slots=fct,
+        flow_size=wl.size,
+        utilization=float(delivered_ep.sum()) / ideal,
+        delivered_bits=float(delivered_ep.sum()),
+        offered_bits=float(wl.size[valid].sum()),
+    )
+    return AdaptiveRow(
+        label=case.label, policy=case.policy, result=result,
+        epoch_utilization=delivered_ep / ep_cap, epoch_estimate_tv=est_tv,
+        recomputes=recomputes, sim_s=0.0, meta=dict(case.meta))
+
+
+def run_adaptive(
+    cases: list[AdaptiveCase], bits_per_slot: float
+) -> list[AdaptiveRow]:
+    """Closed-loop epoch-driven simulation of each case (see
+    :class:`AdaptiveCase`); results come back in input order.
+
+    Every case advances through the same sparse single-hop per-slot engine
+    as :func:`run_sweep` (``policy="oblivious"`` reproduces
+    ``simulate(oblivious_schedule(n), wl)`` exactly, FCT-for-FCT); the
+    epoch layer on top harvests the VOQ byte counters each boundary, runs
+    the estimation round, and swaps in the recomputed circuit plan while
+    VOQs, in-flight flows, and the processor-sharing credit state carry
+    over untouched.
+    """
+    rows = []
+    for case in cases:
+        t0 = time.perf_counter()
+        row = _run_adaptive_case(case, bits_per_slot)
+        row.sim_s = time.perf_counter() - t0
+        rows.append(row)
+    return rows
 
 
 def _aggregate_batch_jax(

@@ -23,6 +23,8 @@ __all__ = [
     "dlrm_data_parallel",
     "dlrm_hybrid_parallel",
     "random_hose",
+    "pattern_matrix",
+    "phase_train",
 ]
 
 
@@ -134,3 +136,43 @@ def random_hose(n: int, seed: int = 0, density: float = 0.5) -> np.ndarray:
     m = rng.gamma(0.5, 1.0, size=(n, n)) * (rng.random((n, n)) < density)
     np.fill_diagonal(m, 0.0)
     return hose_normalize(m)
+
+
+# ---------------------------------------------------------------------------
+# Non-stationary traffic: named patterns and phase trains
+# ---------------------------------------------------------------------------
+
+_PATTERNS = {
+    "uniform": lambda n, seed: uniform(n),
+    "ring": lambda n, seed: ring(n),
+    "permutation": permutation,
+    "dlrm": lambda n, seed: dlrm_data_parallel(n),
+    "dlrm_data_parallel": lambda n, seed: dlrm_data_parallel(n),
+    "dlrm_hybrid_parallel": lambda n, seed: dlrm_hybrid_parallel(n),
+    "random_hose": random_hose,
+}
+
+
+def pattern_matrix(name: str, n: int, seed: int = 0) -> np.ndarray:
+    """Named demand pattern, hose-normalized.  ``skew-<x>`` selects
+    :func:`skewed` with ``skew=x`` (e.g. ``"skew-0.7"``)."""
+    if name.startswith("skew-"):
+        return hose_normalize(skewed(n, float(name[5:]), seed=seed))
+    try:
+        fn = _PATTERNS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown pattern {name!r} (have {sorted(_PATTERNS)} or skew-<x>)"
+        ) from None
+    return hose_normalize(fn(n, seed))
+
+
+def phase_train(
+    n: int, phases: tuple[str, ...], seed: int = 0
+) -> list[np.ndarray]:
+    """One hose-normalized demand matrix per phase of a non-stationary
+    workload (e.g. ``("permutation", "uniform", "dlrm")``).  Each phase gets
+    a distinct seed so repeated pattern names differ (two "permutation"
+    phases are two *different* permutations — a genuine shift)."""
+    return [pattern_matrix(p, n, seed=seed + 97 * i)
+            for i, p in enumerate(phases)]

@@ -4,6 +4,7 @@ import numpy as np
 from repro.core.estimation import (
     TrafficEstimator,
     allgather_rows,
+    dequantize,
     estimate_global_matrix,
     quantize_row,
 )
@@ -52,3 +53,45 @@ def test_estimate_global_matrix_consistent():
     g = estimate_global_matrix(period, ests, k=3, bits_per_slot=1e4)
     assert g.shape == (n, n)
     assert (g >= 0).all()
+
+
+def test_estimate_global_matrix_returns_input_units():
+    """Regression: the estimate must come back dequantized (bits), not as
+    raw uint16 quantizer ticks — consumers feed it to vermilion_schedule."""
+    n, k, bps = 6, 3, 1e4
+    rng = np.random.default_rng(2)
+    period = rng.random((n, n)) * 1e6 + 1e5
+    ests = [TrafficEstimator(n=n, alpha=1.0) for _ in range(n)]
+    g = estimate_global_matrix(period, ests, k=k, bits_per_slot=bps)
+    # with alpha=1 the EWMA is the input; recovery is exact up to one
+    # quantization tick of bps * k/(k-1)
+    tick = bps * k / (k - 1)
+    assert np.all(np.abs(g - period) <= tick + 1e-9)
+    assert g.max() > 1e5          # raw ticks would top out around ~100
+
+
+def test_quantize_dequantize_roundtrip():
+    k, bps = 3, 1e4
+    row = np.array([0.0, 12345.0, 9.99e5])
+    q = quantize_row(row, k, bps)
+    back = dequantize(q, k, bps)
+    tick = bps * k / (k - 1)
+    assert np.all(back <= row + 1e-9)
+    assert np.all(row - back <= tick + 1e-9)
+
+
+def test_estimate_global_matrix_partial_gather():
+    """steps < n-1: no crash, leader view returned, unseen rows zero."""
+    n, steps = 8, 3
+    period = np.full((n, n), 5e5)
+    np.fill_diagonal(period, 0.0)
+    ests = [TrafficEstimator(n=n) for _ in range(n)]
+    g = estimate_global_matrix(period, ests, k=3, bits_per_slot=1e4,
+                               steps=steps)
+    # leader 0 has its own row plus the `steps` rows upstream on the ring
+    seen = {0} | {(-i) % n for i in range(1, steps + 1)}
+    for i in range(n):
+        if i in seen:
+            assert g[i].sum() > 0
+        else:
+            assert g[i].sum() == 0
