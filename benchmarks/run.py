@@ -8,10 +8,34 @@ Prints ``name,us_per_call,derived`` CSV.  Sections:
   - schedule_time_fig10 (Fig 10: schedule computation latency)
   - interconnect        (DESIGN.md §7: pod-axis collective pricing)
   - roofline            (per-cell analytic three-term summary)
+
+Persists the perf trajectory for cross-PR tracking:
+  - results/BENCH_schedule.json — construction latency per method per n
+    (per-stage breakdown + hk/euler end-to-end speedup)
+  - results/BENCH_adaptive.json — closed-loop utilization, with and
+    without construction charging
 """
 from __future__ import annotations
 
+import json
+import pathlib
 import sys
+
+RESULTS = pathlib.Path(__file__).resolve().parent.parent / "results"
+
+
+def _adaptive_row_json(row) -> dict:
+    r = row.result
+    return {
+        "label": row.label,
+        "policy": row.policy,
+        "utilization": r.utilization,
+        "completed_frac": r.completed_frac,
+        "recomputes": row.recomputes,
+        "stale_slots": row.stale_slots,
+        "construction_s": row.construction_s,
+        "sim_s": row.sim_s,
+    }
 
 
 def main() -> None:
@@ -30,12 +54,22 @@ def main() -> None:
     sys.stdout.flush()
     fct_bench.main([])
     sys.stdout.flush()
-    adaptive_bench.main([])
+
+    adaptive_rows, charged_rows = adaptive_bench.main([])
     sys.stdout.flush()
-    schedule_time.main()
+
+    sched_rows = schedule_time.main([])
     sys.stdout.flush()
     interconnect_bench.main()
     sys.stdout.flush()
+
+    RESULTS.mkdir(exist_ok=True)
+    (RESULTS / "BENCH_schedule.json").write_text(
+        json.dumps(sched_rows, indent=2) + "\n")
+    (RESULTS / "BENCH_adaptive.json").write_text(json.dumps({
+        "sweep": [_adaptive_row_json(r) for r in adaptive_rows],
+        "charged": [_adaptive_row_json(r) for r in charged_rows],
+    }, indent=2) + "\n")
 
     # roofline summary (analytic three terms per assigned cell)
     from .analytic import cell_cost

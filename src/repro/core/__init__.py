@@ -17,7 +17,7 @@ from .traffic import (
     pattern_matrix,
     phase_train,
 )
-from .rounding import round_matrix, check_rounding
+from .rounding import round_matrix, round_matrices, check_rounding
 from .matching import (
     decompose_matchings,
     decompose_matchings_euler,
@@ -63,6 +63,7 @@ from .estimation import (
     dequantize,
     estimate_global_matrix,
     quantize_row,
+    ring_leader_view,
 )
 from .collectives import (
     ring_allreduce_traffic,

@@ -7,13 +7,23 @@ These matchings ARE Vermilion's periodic schedule.
 
 Two algorithms:
 
-* :func:`decompose_matchings` — D rounds of Hopcroft-Karp
-  (scipy's C implementation).  O(D * E * sqrt(n)).
-* :func:`decompose_matchings_euler` — recursive Euler splitting: an even-D
-  regular bipartite multigraph splits into two D/2-regular halves by
-  alternating edges along Euler circuits.  O(E log D) — this is our TPU-era
-  answer to the paper's CUDA decomposition helper (Fig 10), benchmarked in
-  ``benchmarks/schedule_time.py``.
+* :func:`decompose_matchings` (``method="hk"``) — D rounds of Hopcroft-Karp
+  (scipy's C implementation).  O(D * (n^2 + E * sqrt(n))): every round
+  rebuilds the support and runs one maximum bipartite matching.  The
+  reference path; dominates schedule construction beyond n ~ 512.
+* :func:`decompose_matchings_euler` — batched level-wise Euler splitting:
+  an even-D regular bipartite multigraph splits into two D/2-regular halves
+  by 2-coloring the edges along alternating Euler trails.  All subproblems
+  of a recursion level are split in one shot on flat stub arrays (the trail
+  coloring is a cycle-labeling of an edge permutation, solved by int32
+  pointer doubling), so one level costs O(E log L) vectorized work (L = the
+  longest trail) and the whole decomposition O(E log D log L) — in practice
+  within a small factor of the advertised O(E log D), with C-speed
+  constants.  Odd regularity at *sub*-levels is handled matching-free by an
+  Alon-style extraction (dummy-padded halving); at most one Hopcroft-Karp
+  peel ever runs, at the top level, and only when D itself is odd.  This is
+  our TPU-era answer to the paper's CUDA decomposition helper (Fig 10),
+  benchmarked in ``benchmarks/schedule_time.py``.
 """
 from __future__ import annotations
 
@@ -47,8 +57,19 @@ def extract_perfect_matching(e: np.ndarray) -> np.ndarray:
     return match.astype(np.int64)
 
 
-def decompose_matchings(e: np.ndarray) -> np.ndarray:
-    """Decompose regular integer matrix ``e`` into (D, n) permutation array."""
+def decompose_matchings(e: np.ndarray, method: str = "hk") -> np.ndarray:
+    """Decompose regular integer matrix ``e`` into a (D, n) permutation array.
+
+    ``method="hk"`` peels one Hopcroft-Karp matching per round (the
+    historical default, kept as the golden reference); ``method="euler"``
+    dispatches to :func:`decompose_matchings_euler`.  Both return the same
+    *multiset* of matchings reassembling ``e`` exactly; the order (and, for
+    multigraphs with several valid decompositions, the split) may differ.
+    """
+    if method == "euler":
+        return decompose_matchings_euler(e)
+    if method != "hk":
+        raise ValueError(f"unknown decomposition method {method!r}")
     e = np.asarray(e, dtype=np.int64).copy()
     if not is_regular(e):
         raise ValueError("matrix is not regular (row sums != col sums)")
@@ -68,82 +89,273 @@ def decompose_matchings(e: np.ndarray) -> np.ndarray:
 # Euler-split fast path
 # ---------------------------------------------------------------------------
 
-def _euler_split(e: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
-    """Split even-regular ``e`` into two D/2-regular halves via Euler circuits.
+def _cycle_min_labels(sigma: np.ndarray) -> np.ndarray:
+    """Label every element with the minimum index of its ``sigma``-orbit.
 
-    View e as an undirected bipartite multigraph (left=rows, right=cols);
-    every vertex has even degree, so edges partition into closed trails.
-    Walking a trail alternates left->right / right->left steps; assign
-    left->right traversals to half A and right->left traversals
-    (re-oriented) to half B.  Each left vertex alternates out/in along the
-    trail, so both halves are exactly D/2-regular.
+    Pointer doubling (lab = min(lab, lab[p]); p = p[p]) in int32 with
+    in-place updates: two random gathers and one fused min per iteration,
+    ceil(log2(L)) iterations for longest cycle L.  Fixed points label
+    themselves for free via the compressed subset.
     """
+    E = len(sigma)
+    lab = np.arange(E, dtype=np.int32)
+    sigma = sigma.astype(np.int32, copy=False)
+    nf = np.flatnonzero(sigma != lab)
+    if nf.size == 0:
+        return lab
+    if nf.size == E:
+        p = sigma.copy()
+        loc = lab.copy()
+        back = None
+    else:
+        inv = np.empty(E, dtype=np.int32)
+        inv[nf] = np.arange(nf.size, dtype=np.int32)
+        p = np.take(inv, np.take(sigma, nf))
+        loc = np.arange(nf.size, dtype=np.int32)
+        back = nf
+    g = np.empty_like(loc)
+    p2 = np.empty_like(p)
+    lt = np.empty(len(loc), dtype=bool)
+    for it in range(64):  # ceil(log2(L)) + 1 passes; 64 is unreachable
+        np.take(loc, p, out=g, mode="clip")
+        if it & 1:
+            np.less(g, loc, out=lt)
+            if not lt.any():
+                break
+        np.minimum(loc, g, out=loc)
+        np.take(p, p, out=p2, mode="clip")
+        p, p2 = p2, p
+    if back is None:
+        return loc
+    lab[nf] = back[loc]
+    return lab
+
+
+def _pair_adjacent(order: np.ndarray) -> np.ndarray:
+    """Involution pairing order[2i] <-> order[2i+1] (positions -> indices)."""
+    p = np.empty(len(order), dtype=order.dtype)
+    p[order[0::2]] = order[1::2]
+    p[order[1::2]] = order[0::2]
+    return p
+
+
+def _euler_colors(eu: np.ndarray, ev: np.ndarray, sub: np.ndarray,
+                  n: int) -> np.ndarray:
+    """2-color a batch of even-degree bipartite multigraphs so that every
+    (subproblem, vertex) sees both colors equally often.
+
+    Pairing consecutive stubs at each vertex chains the edges into closed
+    alternating trails; trails 2-color consistently because the two pairing
+    classes (left / right) alternate.  The orbit labels of the edge
+    permutation ``pL o pR`` identify each trail's two color classes.
+    """
+    E = len(eu)
+    if E == 0:
+        return np.zeros(0, dtype=bool)
+    base = sub * n
+    pL = _pair_adjacent(np.argsort(base + eu, kind="stable"))
+    pR = _pair_adjacent(np.argsort(base + ev, kind="stable"))
+    lab = _cycle_min_labels(pL[pR])
+    return lab > lab[pR]
+
+
+def _extract_matchings_alon(eu: np.ndarray, ev: np.ndarray, sub: np.ndarray,
+                            n: int, d: int, S: int
+                            ) -> tuple[np.ndarray, np.ndarray]:
+    """One perfect matching per subproblem (each d-regular, d odd >= 3)
+    without any bipartite-matching subroutine (Alon, IPL 2003).
+
+    Weight every real edge alpha and pad with r cyclic-shift dummies so
+    alpha*d + r = 2^t >= n*d.  Halve t times by weighted Euler splits,
+    always keeping the half with less dummy mass: the dummy mass r*n < 2^t
+    shrinks below one edge, leaving a 1-regular all-real graph — a perfect
+    matching per subproblem.  Returns (perms (S, n), matched edge indices).
+    """
+    t = max(int(np.ceil(np.log2(max(n * d, 2)))), 1)
+    big = 1 << t
+    alpha, r = divmod(big, d)
+    E = len(eu)
+    sh = 1 + (np.arange(S * r * n) // n) % r
+    du = np.tile(np.arange(n), S * r)
+    weu = np.concatenate([eu, du])
+    wev = np.concatenate([ev, (du + sh) % n])
+    wsub = np.concatenate([sub, np.repeat(np.arange(S), r * n)])
+    wc = np.concatenate([np.full(E, alpha, dtype=np.int64),
+                         np.ones(S * r * n, dtype=np.int64)])
+    worig = np.concatenate([np.arange(E), np.full(S * r * n, -1)])
+    for _ in range(t):
+        odd = (wc & 1).astype(bool)
+        c = np.zeros(len(wc), dtype=bool)
+        c[odd] = _euler_colors(weu[odd], wev[odd], wsub[odd], n)
+        half = wc >> 1
+        dummy = worig < 0
+        base_bad = np.where(dummy, half, 0).astype(np.float64)
+        bad0 = np.bincount(wsub, weights=base_bad + (dummy & odd & ~c),
+                           minlength=S)
+        bad1 = np.bincount(wsub, weights=base_bad + (dummy & odd & c),
+                           minlength=S)
+        pick = bad1 < bad0
+        wc = half + (odd & (c == pick[wsub]))
+        keep = wc > 0
+        weu, wev, wsub, wc, worig = (
+            weu[keep], wev[keep], wsub[keep], wc[keep], worig[keep])
+    if not ((worig >= 0).all() and len(wc) == S * n):  # pragma: no cover
+        raise AssertionError("Alon extraction left dummy edges behind")
+    perms = np.empty((S, n), dtype=np.int64)
+    perms[wsub, weu] = wev
+    return perms, worig
+
+
+def _euler_split(e: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Split an even-regular matrix into two D/2-regular halves via Euler
+    trails — stub-array rewrite of the old dense O(n^2)-scan walk; costs
+    O(E) expansion plus the vectorized trail coloring."""
+    e = np.asarray(e, dtype=np.int64)
     n = e.shape[0]
-    # adjacency stacks with multiplicity, for both orientations
-    rem = e.astype(np.int64).copy()          # remaining l->r multiplicity
-    rem_t = rem.T.copy()                      # remaining r->l multiplicity
-    a = np.zeros_like(rem)
-    b = np.zeros_like(rem)
-    # per-vertex scan pointers to amortize neighbor search
-    ptr_l = np.zeros(n, dtype=np.int64)
-    ptr_r = np.zeros(n, dtype=np.int64)
-    deg_l = rem.sum(axis=1)
-    for start in range(n):
-        while deg_l[start] > 0:
-            u, on_left = start, True
-            while True:
-                if on_left:
-                    while ptr_l[u] < n and rem[u, ptr_l[u]] == 0:
-                        ptr_l[u] += 1
-                    if ptr_l[u] == n:
-                        break  # trail closed
-                    v = ptr_l[u]
-                    rem[u, v] -= 1
-                    rem_t[v, u] -= 1
-                    deg_l[u] -= 1
-                    a[u, v] += 1
-                    u, on_left = v, False
-                else:
-                    while ptr_r[u] < n and rem_t[u, ptr_r[u]] == 0:
-                        ptr_r[u] += 1
-                    if ptr_r[u] == n:
-                        # right vertex exhausted: reset pointer (multigraph
-                        # trails can revisit); rescan from 0
-                        if rem_t[u].sum() == 0:
-                            break
-                        ptr_r[u] = 0
-                        continue
-                    v = ptr_r[u]
-                    rem_t[u, v] -= 1
-                    rem[v, u] -= 1
-                    deg_l[v] -= 1
-                    b[v, u] += 1
-                    u, on_left = v, True
-            # pointer for left vertex may also need reset on revisit
-            if deg_l[start] > 0 and ptr_l[start] == n:
-                ptr_l[start] = 0
+    ui, vi = np.nonzero(e)
+    mult = e[ui, vi]
+    eu = np.repeat(ui, mult)
+    ev = np.repeat(vi, mult)
+    c = _euler_colors(eu, ev, np.zeros(len(eu), dtype=np.int64), n)
+    a = np.zeros_like(e)
+    b = np.zeros_like(e)
+    np.add.at(a, (eu[~c], ev[~c]), 1)
+    np.add.at(b, (eu[c], ev[c]), 1)
     return a, b
 
 
-def decompose_matchings_euler(e: np.ndarray) -> np.ndarray:
-    """Euler-split decomposition (fast path). Same output contract as
-    :func:`decompose_matchings` (set of matchings; order may differ)."""
+_CHUNK_ELEMS = 65536      # depth-first recursion piece size (L2-resident)
+
+
+def _decompose_stubs(ev: np.ndarray, byr: np.ndarray, n: int, d: int,
+                     out: list[np.ndarray]) -> None:
+    """Batched level-wise Euler decomposition of uniform-degree stub arrays.
+
+    Physical layout invariant: edges sorted by (subproblem, src, dst), each
+    (subproblem, src) block holding exactly ``d`` edges — so src and
+    subproblem ids never need storing (they are index arithmetic) and the
+    left pairing is simply "adjacent position" (x ^ 1).  ``byr`` is the
+    same edge set ordered by (subproblem, dst, src), maintained
+    incrementally across levels so no level ever sorts.  One level is ~15
+    flat O(E) passes plus the pointer-doubling trail labeling.
+
+    Subproblems never interact, so once the piece spans several of them the
+    recursion goes depth-first on cache-sized halves (subproblem-aligned):
+    all remaining levels of a piece run on L2-resident arrays, which on a
+    memory-bound box is worth ~2x over breadth-first whole-array sweeps.
+    """
+    ev = ev.astype(np.int32, copy=False)
+    byr = byr.astype(np.int32, copy=False)
+    while d > 1:
+        S = len(ev) // (n * d)
+        if len(ev) > _CHUNK_ELEMS and S >= 2:
+            h = (S // 2) * n * d
+            _decompose_stubs(ev[:h], byr[:h], n, d, out)
+            _decompose_stubs(ev[h:], byr[h:] - np.int32(h), n, d, out)
+            return
+        if d % 2 == 1:
+            eu = np.tile(np.repeat(np.arange(n), d), S)
+            sub = np.repeat(np.arange(S), n * d)
+            perms, pos = _extract_matchings_alon(ev=ev.astype(np.int64),
+                                                 eu=eu, sub=sub,
+                                                 n=n, d=d, S=S)
+            out.append(perms)
+            keep = np.ones(len(ev), dtype=bool)
+            keep[pos] = False
+            newidx = (np.cumsum(keep, dtype=np.int64) - 1).astype(np.int32)
+            byr = newidx[byr[keep[byr]]]
+            ev = ev[keep]
+            d -= 1
+            continue
+        E = len(ev)
+        # right pairing from byr order; left pairing is adjacent-position
+        pr = _pair_adjacent(byr)
+        lab = _cycle_min_labels(pr ^ 1)          # sigma = pL o pR, pL = ^1
+        c = lab > np.take(lab, pr, mode="clip")
+        # stable partition by color within each subproblem block: both
+        # children are exactly (n*d/2)-sized, so block offsets are closed
+        # form.  The same partition, applied in byr space, keeps byr sorted
+        # by (subproblem, dst, src) for the next level.
+        blk = n * d
+        half = blk >> 1
+        # zeros land at s*blk + rank0 with rank0 = cz[i]-1 - s*half, ones at
+        # s*blk + half + rank1 with rank1 = i - cz[i] - s*blk + s*half; both
+        # collapse to (class expression) + s*half.
+        soff = np.repeat(
+            np.arange(E // blk, dtype=np.int32) * np.int32(half), blk)
+        ar = np.arange(E, dtype=np.int32)
+        cz = np.cumsum(~c, dtype=np.int32)
+        dest = np.where(c, half + ar - cz, cz - 1) + soff
+        cb = np.take(c, byr, mode="clip")
+        czb = np.cumsum(~cb, dtype=np.int32)
+        destb = np.where(cb, half + ar - czb, czb - 1) + soff
+        ev_new = np.empty_like(ev)
+        ev_new[dest] = ev
+        byr_new = np.empty_like(byr)
+        byr_new[destb] = np.take(dest, byr, mode="clip")
+        ev, byr = ev_new, byr_new
+        d //= 2
+    if d == 1:
+        out.append(ev.reshape(-1, n).astype(np.int64))
+
+
+def decompose_matchings_euler(
+    e: np.ndarray, known: np.ndarray | None = None
+) -> np.ndarray:
+    """Euler-split decomposition (fast path).  Same output contract as
+    :func:`decompose_matchings` (multiset of matchings reassembling ``e``;
+    order may differ).
+
+    ``known``: optional (M, n) array of perfect matchings already known to
+    be contained in ``e`` (entrywise ``e >= sum of their indicators``).
+    They are peeled for free and returned first — ``vermilion_schedule``
+    passes the n-1 cyclic shifts of the traffic-oblivious residual, which
+    leaves a (k-1)*n + 1 regular remainder whose single Hopcroft-Karp peel
+    opens a pure even-split cascade whenever (k-1)*n is a power of two.
+
+    At most one Hopcroft-Karp peel happens per decomposition (only when the
+    post-peel regularity is odd); odd regularity at deeper levels is
+    resolved matching-free (see :func:`_extract_matchings_alon`).
+    """
     e = np.asarray(e, dtype=np.int64)
     if not is_regular(e):
         raise ValueError("matrix is not regular")
     d = int(e.sum(axis=1)[0])
     n = e.shape[0]
-    if d == 0:
-        return np.empty((0, n), dtype=np.int64)
-    if d == 1:
-        perm = np.argmax(e, axis=1)
-        return perm[None, :]
-    if d % 2 == 1:
-        perm = extract_perfect_matching(e)
+    out: list[np.ndarray] = []
+    if known is not None and len(known):
+        known = np.asarray(known, dtype=np.int64)
         rest = e.copy()
-        rest[np.arange(n), perm] -= 1
-        return np.concatenate([perm[None, :], decompose_matchings_euler(rest)])
-    a, b = _euler_split(e)
-    return np.concatenate(
-        [decompose_matchings_euler(a), decompose_matchings_euler(b)]
-    )
+        np.add.at(rest, (np.tile(np.arange(n), len(known)), known.reshape(-1)),
+                  -1)
+        if (rest < 0).any():
+            raise ValueError("known matchings are not contained in e")
+        out.append(known)
+        e = rest
+        d -= len(known)
+    if d == 0:
+        return (np.concatenate(out) if out
+                else np.empty((0, n), dtype=np.int64))
+    if n == 1:
+        out.append(np.zeros((d, 1), dtype=np.int64))
+        return np.concatenate(out)
+    ui, vi = np.nonzero(e)
+    mult = e[ui, vi]
+    eu = np.repeat(ui, mult)
+    ev = np.repeat(vi, mult)
+    if d % 2 == 1 and d > 1:
+        # the one permitted Hopcroft-Karp peel: evens the top regularity
+        perm = extract_perfect_matching(e)
+        out.append(perm[None, :])
+        key = eu * n + ev                          # sorted (construction)
+        pos = np.searchsorted(key, np.arange(n) * n + perm)
+        keep = np.ones(len(eu), dtype=bool)
+        keep[pos] = False
+        eu, ev = eu[keep], ev[keep]
+        d -= 1
+    if d == 1:
+        out.append(ev[None, :])
+        return np.concatenate(out)
+    byr = np.argsort(ev.astype(np.int64) * n + eu, kind="stable")
+    _decompose_stubs(ev, byr, n, d, out)
+    return np.concatenate(out)

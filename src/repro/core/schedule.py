@@ -11,7 +11,11 @@ from dataclasses import dataclass, field
 import numpy as np
 from scipy.optimize import linear_sum_assignment
 
-from .matching import decompose_matchings, extract_perfect_matching
+from .matching import (
+    decompose_matchings,
+    decompose_matchings_euler,
+    extract_perfect_matching,
+)
 from .rounding import round_matrix
 from .traffic import hose_normalize, saturate
 
@@ -69,7 +73,9 @@ class Schedule:
 
     def capacity_per_slot(self, c: float = 1.0) -> np.ndarray:
         """(n_slots, n, n) instantaneous capacity (bits per slot-time at
-        c=1 meaning one slot's worth). Used by the simulator."""
+        c=1 meaning one slot's worth). Used by the dense simulator paths;
+        costs ~8 * n^2 * n_slots bytes — prefer :meth:`slot_circuits` for
+        the sparse engines at large n."""
         t, n = self.T, self.n
         out = np.zeros((self.n_slots, n, n), dtype=np.float64)
         slot_of = np.repeat(np.arange(self.n_slots), self.d_hat)[:t]
@@ -80,6 +86,32 @@ class Schedule:
             c * (1.0 - self.recfg_frac),
         )
         out[:, np.arange(n), np.arange(n)] = 0.0
+        return out
+
+    def slot_circuits(self, c: float = 1.0) -> list[tuple[np.ndarray,
+                                                          np.ndarray,
+                                                          np.ndarray]]:
+        """Sparse per-slot circuit plan: for each period slot, the
+        ``(src, dst, cap)`` arrays of its <= n * d_hat distinct circuits,
+        lexicographically sorted by (src, dst) with parallel-circuit
+        capacities accumulated and self-loops dropped — entry-for-entry
+        (and float-for-float) what ``np.nonzero`` applied to
+        :meth:`capacity_per_slot` yields, without ever materializing the
+        ~8 * n^3 / d_hat byte dense array."""
+        n = self.n
+        w = c * (1.0 - self.recfg_frac)
+        src0 = np.arange(n)
+        out = []
+        for s in range(self.n_slots):
+            blk = self.perms[s * self.d_hat:(s + 1) * self.d_hat]
+            pid = (src0[None, :] * n + blk).reshape(-1)
+            upid, inv = np.unique(pid, return_inverse=True)
+            # accumulate in input order (matches the dense path's add.at)
+            cap = np.bincount(inv, weights=np.full(len(pid), w),
+                              minlength=len(upid))
+            src, dst = upid // n, upid % n
+            keep = src != dst
+            out.append((src[keep], dst[keep], cap[keep]))
         return out
 
 
@@ -98,9 +130,8 @@ def _configuration_model(
     out_stubs = np.repeat(np.arange(n), x_out)
     in_stubs = np.repeat(np.arange(n), x_in)
     rng.shuffle(in_stubs)
-    e = np.zeros((n, n), dtype=np.int64)
-    np.add.at(e, (out_stubs, in_stubs), 1)
-    return e
+    return np.bincount(out_stubs * n + in_stubs,
+                       minlength=n * n).reshape(n, n)
 
 
 def vermilion_emulated_topology(
@@ -175,10 +206,34 @@ def vermilion_schedule(
     seed: int = 0,
     spread: bool = True,
     normalize: str = "hose",
+    method: str = "euler",
 ) -> Schedule:
-    """Algorithm 1, ``generateSchedule``: k*n perfect matchings, round-robin."""
+    """Algorithm 1, ``generateSchedule``: k*n perfect matchings, round-robin.
+
+    ``method`` selects the decomposition of the emulated multigraph:
+
+      * ``"euler"`` (default) — the batched Euler-split fast path.  The
+        traffic-oblivious residual (one edge per ordered pair, Algorithm 1
+        step 3) is peeled for free as the n-1 cyclic shifts, so only the
+        (k-1)*n + 1 regular traffic+padding remainder is decomposed —
+        ~10-20x faster than "hk" by n = 512 and the production path of the
+        adaptive loop.
+      * ``"hk"``   — one Hopcroft-Karp matching per round (the original
+        reference path).
+
+    Both methods decompose the *same* emulated multigraph, so regularity
+    and emulated capacity are identical; only the matching multiset's
+    split/order may differ (round-robin order is free, cf. paper §2.1).
+    """
     e = vermilion_emulated_topology(m, k=k, seed=seed, normalize=normalize)
-    perms = decompose_matchings(e)
+    n = e.shape[0]
+    if method == "euler":
+        shifts = (np.arange(n)[None, :] + np.arange(1, n)[:, None]) % n
+        perms = decompose_matchings_euler(e, known=shifts)
+    elif method == "hk":
+        perms = decompose_matchings(e)
+    else:
+        raise ValueError(f"unknown decomposition method {method!r}")
     if spread:
         perms = spread_matchings(perms)
     return Schedule(
@@ -186,7 +241,8 @@ def vermilion_schedule(
         d_hat=d_hat,
         recfg_frac=recfg_frac,
         name=f"vermilion-k{k}",
-        meta={"k": k, "seed": seed, "spread": spread, "normalize": normalize},
+        meta={"k": k, "seed": seed, "spread": spread, "normalize": normalize,
+              "method": method},
     )
 
 

@@ -61,8 +61,11 @@ through one slot loop with a leading batch axis:
    epochs, per-node VOQ byte counters harvested at each boundary feed the
    Appendix-A pipeline (EWMA → quantize → ring-AllGather → dequantize),
    and the recomputed ``vermilion_schedule`` is hot-swapped without
-   resetting VOQ or flow state.  :func:`phase_shifting_workload` generates
-   the non-stationary (phase-train) traffic that exercises it.
+   resetting VOQ or flow state.  Construction is optionally charged for
+   real (``AdaptiveCase.construction_slots``): the new schedule only
+   activates after the slots its construction consumed, with the stale
+   schedule serving in the interim.  :func:`phase_shifting_workload`
+   generates the non-stationary (phase-train) traffic that exercises it.
 
 The pre-vectorization engine is kept verbatim as
 :func:`simulate_reference`; golden-trace tests pin the new engine to it on
@@ -688,17 +691,16 @@ def _simulate_batch_singlehop(
     horizons = np.array([wl.horizon for _, wl in cases], dtype=np.int64)
     H = int(horizons.max())
 
-    # circuit support per (case, period slot): pair ids + capacities
-    caps_list = [sched.capacity_per_slot(bits_per_slot) for sched, _ in cases]
-    ns = [c.shape[0] for c in caps_list]
+    # circuit support per (case, period slot): pair ids + capacities,
+    # straight from the sparse plan (no dense (n_slots, n, n) array)
+    ns = [sched.n_slots for sched, _ in cases]
     per_case = []
-    for b, caps in enumerate(caps_list):
+    for b, (sched, _) in enumerate(cases):
         plans = []
-        for ps in range(caps.shape[0]):
-            at, v = np.nonzero(caps[ps])
+        for at, v, cap in sched.slot_circuits(bits_per_slot):
             plans.append({
                 "pid": (b * n + at) * n + v,
-                "cap": caps[ps][at, v],
+                "cap": cap,
                 "case": np.full(len(at), b, dtype=np.int64),
             })
         per_case.append(plans)
@@ -1034,6 +1036,26 @@ class AdaptiveCase:
     matrices).  Without it they fall back to each epoch's realized offered
     matrix, which carries the heavy-tailed flow-size sampling noise an
     actual oracle of the rates would not see.
+
+    ``construction_slots`` charges schedule construction for real: a
+    recomputed schedule only takes effect that many slots into the epoch,
+    with the previous (stale) schedule serving in the interim.  ``0`` (the
+    default) is the free-construction idealization — the epoch layer's
+    dynamics are then bit-identical to the uncharged (PR 2) control loop
+    given the same schedules (note the decomposition default is now the
+    Euler fast path; pass ``method="hk"`` to reproduce PR 2's schedules
+    matching-for-matching as well).  Pass ``"measured"`` to charge each recompute its actual
+    wall-clock construction time, converted at ``slot_seconds`` seconds per
+    slot (the paper's 4.5 us slots at 100G).  A charge of a full epoch or
+    more means the loop never catches up: every schedule is superseded
+    before activation and the fabric serves on the cold-start plan forever
+    — the epoch-length / construction-cost tradeoff the fast decomposition
+    path exists to win.
+
+    ``method`` selects the ``vermilion_schedule`` decomposition
+    (``"euler"`` fast path vs ``"hk"`` reference) — combined with
+    ``construction_slots="measured"`` this exposes the construction-latency
+    tradeoff end to end.
     """
 
     wl: Workload
@@ -1047,6 +1069,9 @@ class AdaptiveCase:
     normalize: str = "hose"
     seed: int = 0
     oracle_demand: np.ndarray | None = None
+    construction_slots: int | str = 0
+    slot_seconds: float = 4.5e-6
+    method: str = "euler"
     label: str = ""
     meta: dict = field(default_factory=dict)
 
@@ -1059,9 +1084,12 @@ class AdaptiveRow:
     epoch_utilization: np.ndarray   # (n_epochs,) delivered / epoch capacity
     epoch_estimate_tv: np.ndarray   # (n_epochs,) estimate-vs-truth total-
                                     # variation distance (nan if no estimate)
-    recomputes: int                 # schedule hot-swaps performed
+    recomputes: int                 # schedule recomputations performed
     sim_s: float
     meta: dict
+    stale_slots: int = 0            # slots served by an outdated schedule
+                                    # while construction was still running
+    construction_s: float = 0.0     # wall-clock spent constructing schedules
 
 
 def _run_adaptive_case(case: AdaptiveCase, bits_per_slot: float) -> AdaptiveRow:
@@ -1069,6 +1097,13 @@ def _run_adaptive_case(case: AdaptiveCase, bits_per_slot: float) -> AdaptiveRow:
         raise ValueError(case.policy)
     if case.epoch_slots <= 0:
         raise ValueError("epoch_slots must be positive")
+    cs = case.construction_slots
+    measured = cs == "measured"
+    if not measured and not (isinstance(cs, (int, np.integer)) and cs >= 0):
+        raise ValueError(
+            "construction_slots must be a nonnegative int or 'measured'")
+    if measured and case.slot_seconds <= 0:
+        raise ValueError("slot_seconds must be positive")
     wl, n = case.wl, case.wl.n
     E, H = case.epoch_slots, wl.horizon
     n_epochs = -(-H // E)
@@ -1102,17 +1137,21 @@ def _run_adaptive_case(case: AdaptiveCase, bits_per_slot: float) -> AdaptiveRow:
     q_unit = _quantizer_unit(E, case.k, case.d_hat, bits_per_slot)
 
     def support_plans(sched: Schedule) -> list[tuple[np.ndarray, np.ndarray]]:
-        caps = sched.capacity_per_slot(bits_per_slot)
-        out = []
-        for ps in range(caps.shape[0]):
-            at, v = np.nonzero(caps[ps])
-            out.append((at * n + v, caps[ps][at, v]))
-        return out
+        return [(at * n + v, cap)
+                for at, v, cap in sched.slot_circuits(bits_per_slot)]
+
+    construction_s = 0.0
+    last_construction = 0.0
 
     def vsched(m: np.ndarray, seed: int) -> Schedule:
-        return vermilion_schedule(
+        nonlocal construction_s, last_construction
+        t0 = time.perf_counter()
+        s = vermilion_schedule(
             m, k=case.k, d_hat=case.d_hat, recfg_frac=case.recfg_frac,
-            seed=seed, normalize=case.normalize)
+            seed=seed, normalize=case.normalize, method=case.method)
+        last_construction = time.perf_counter() - t0
+        construction_s += last_construction
+        return s
 
     if case.policy in ("oracle", "stale"):
         sched = vsched(oracle_m[0], case.seed)
@@ -1121,12 +1160,18 @@ def _run_adaptive_case(case: AdaptiveCase, bits_per_slot: float) -> AdaptiveRow:
                                    recfg_frac=case.recfg_frac)
     plans = support_plans(sched)
     sched_t0 = 0                    # slot the current schedule was installed
+    pending: tuple[int, Schedule] | None = None
 
     delivered_ep = np.zeros(n_epochs)
     est_tv = np.full(n_epochs, np.nan)
     recomputes = 0
+    stale_slots = 0
 
     for slot in range(H):
+        if pending is not None and slot >= pending[0]:
+            sched = pending[1]
+            plans, sched_t0 = support_plans(sched), slot
+            pending = None
         if slot and slot % E == 0:
             epoch = slot // E
             swap = None
@@ -1144,9 +1189,19 @@ def _run_adaptive_case(case: AdaptiveCase, bits_per_slot: float) -> AdaptiveRow:
                 if oracle_m[epoch].sum() > 0:
                     swap = vsched(oracle_m[epoch], case.seed + epoch)
             if swap is not None:
-                sched, plans, sched_t0 = swap, support_plans(swap), slot
                 recomputes += 1
+                charge = (int(np.ceil(last_construction / case.slot_seconds))
+                          if measured else int(cs))
+                if charge == 0:
+                    sched, plans, sched_t0 = swap, support_plans(swap), slot
+                    pending = None   # a zero-cost swap supersedes any pending
+                else:
+                    # the stale schedule keeps serving until construction
+                    # finishes; a recompute next epoch supersedes this one
+                    pending = (slot + charge, swap)
             counters[:] = 0.0
+        if pending is not None:
+            stale_slots += 1
 
         newf = order[bucket[slot]:bucket[slot + 1]]
         if newf.size:
@@ -1174,7 +1229,8 @@ def _run_adaptive_case(case: AdaptiveCase, bits_per_slot: float) -> AdaptiveRow:
     return AdaptiveRow(
         label=case.label, policy=case.policy, result=result,
         epoch_utilization=delivered_ep / ep_cap, epoch_estimate_tv=est_tv,
-        recomputes=recomputes, sim_s=0.0, meta=dict(case.meta))
+        recomputes=recomputes, sim_s=0.0, meta=dict(case.meta),
+        stale_slots=stale_slots, construction_s=construction_s)
 
 
 def run_adaptive(

@@ -149,3 +149,75 @@ def test_adaptive_case_validation():
     with pytest.raises(ValueError):
         run_adaptive([AdaptiveCase(wl, 100, "oracle",
                                    oracle_demand=np.zeros((1, 2, 2)))], BPS)
+    with pytest.raises(ValueError):
+        run_adaptive([AdaptiveCase(wl, 100, construction_slots=-3)], BPS)
+    with pytest.raises(ValueError):
+        run_adaptive([AdaptiveCase(wl, 100, construction_slots="sometimes")],
+                     BPS)
+    with pytest.raises(ValueError):
+        run_adaptive([AdaptiveCase(wl, 100, construction_slots="measured",
+                                   slot_seconds=0.0)], BPS)
+
+
+def _shifting(n=12, load=0.5, horizon=1500, d_hat=2, seed=1):
+    return phase_shifting_workload(
+        n, load, horizon, BPS, d_hat=d_hat, seed=seed,
+        phases=("permutation", "uniform"), shift_period=500)
+
+
+def test_construction_slots_zero_is_exact_free_construction():
+    """Acceptance: the default construction_slots=0 reproduces the
+    free-construction (PR 2) dynamics exactly, FCT-for-FCT."""
+    wl = _shifting()
+    common = dict(wl=wl, epoch_slots=100, policy="adaptive", d_hat=2,
+                  recfg_frac=RECFG, alpha=0.5)
+    default, explicit = run_adaptive([
+        AdaptiveCase(label="default", **common),
+        AdaptiveCase(construction_slots=0, label="explicit", **common),
+    ], BPS)
+    assert np.array_equal(default.result.fct_slots,
+                          explicit.result.fct_slots)
+    assert default.result.delivered_bits == explicit.result.delivered_bits
+    assert default.stale_slots == explicit.stale_slots == 0
+
+
+def test_construction_charging_tradeoff_fast_beats_slow():
+    """Acceptance: with construction charged, the fast constructor (small
+    charge) retains strictly higher utilization than the slow one (charge
+    >= the epoch, so its schedules are superseded before activation) on
+    phase-shifting traffic — and charging anything can only hurt."""
+    wl = _shifting()
+    E = 100
+    common = dict(wl=wl, epoch_slots=E, policy="adaptive", d_hat=2,
+                  recfg_frac=RECFG, alpha=0.5)
+    free, fast, slow = run_adaptive([
+        AdaptiveCase(construction_slots=0, label="free", **common),
+        AdaptiveCase(construction_slots=10, label="fast", **common),
+        AdaptiveCase(construction_slots=2 * E, label="slow", **common),
+    ], BPS)
+    assert fast.result.utilization > slow.result.utilization
+    assert free.result.utilization >= fast.result.utilization - 1e-12
+    # accounting: the fast path was stale for 10 slots per recompute, the
+    # slow path for every slot after its first recompute
+    assert fast.stale_slots == 10 * fast.recomputes
+    assert slow.recomputes > 0
+    assert slow.stale_slots == wl.horizon - E
+    assert fast.construction_s > 0.0
+
+
+def test_construction_charging_measured_mode_runs():
+    """'measured' converts real wall-clock to slots; with a generous slot
+    time construction is nearly free, with a tiny one the loop starves."""
+    wl = _shifting(horizon=1000)
+    common = dict(wl=wl, epoch_slots=100, policy="adaptive", d_hat=2,
+                  recfg_frac=RECFG, alpha=0.5)
+    generous, starved = run_adaptive([
+        AdaptiveCase(construction_slots="measured", slot_seconds=10.0,
+                     label="generous", **common),
+        AdaptiveCase(construction_slots="measured", slot_seconds=1e-12,
+                     label="starved", **common),
+    ], BPS)
+    assert generous.stale_slots <= generous.recomputes  # <=1 slot per swap
+    assert starved.stale_slots == wl.horizon - 100      # never activates
+    assert (generous.result.utilization
+            >= starved.result.utilization - 1e-12)

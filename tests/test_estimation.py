@@ -7,6 +7,7 @@ from repro.core.estimation import (
     dequantize,
     estimate_global_matrix,
     quantize_row,
+    ring_leader_view,
 )
 
 
@@ -35,6 +36,20 @@ def test_allgather_partial_steps():
     have = (views[0] == rows).all(axis=1) | (rows.sum(axis=1) == 0)
     assert have[0]
     assert not (views[0][(0 - 4) % n] == rows[(0 - 4) % n]).all()
+
+
+def test_ring_leader_view_matches_simulated_gather():
+    """The closed-form O(n^2) leader view must equal the simulated ring
+    pipeline's view for every (steps, leader) — it replaces the (n, n, n)
+    exchange tensor on the adaptive loop's per-epoch path."""
+    n = 9
+    rng = np.random.default_rng(4)
+    rows = rng.integers(0, 1000, size=(n, n)).astype(np.uint16)
+    for steps in (0, 1, 3, n - 2, n - 1, None):
+        views = allgather_rows(rows, steps=steps)
+        for leader in (0, 2, n - 1):
+            fast = ring_leader_view(rows, steps=steps, leader=leader)
+            assert (fast == views[leader]).all(), (steps, leader)
 
 
 def test_ewma_estimator():

@@ -74,3 +74,82 @@ def test_decompose_deterministic_sweep(n, d, seed):
     e = random_regular(n, d, rng)
     _check(e, decompose_matchings(e))
     _check(e, decompose_matchings_euler(e))
+
+
+def test_decompose_method_dispatch():
+    rng = np.random.default_rng(0)
+    e = random_regular(9, 6, rng)
+    _check(e, decompose_matchings(e, method="euler"))
+    _check(e, decompose_matchings(e, method="hk"))
+    with pytest.raises(ValueError):
+        decompose_matchings(e, method="bogus")
+
+
+def test_euler_known_matchings_peeled_first():
+    """known= peels contained matchings for free and returns them first."""
+    rng = np.random.default_rng(5)
+    n = 11
+    e = random_regular(n, 7, rng)
+    known = np.stack([(np.arange(n) + s) % n for s in (1, 2)])
+    idx = np.arange(n)
+    for p in known:
+        e[idx, p] += 1
+    perms = decompose_matchings_euler(e, known=known)
+    _check(e, perms)
+    assert (perms[:2] == known).all()
+    # a matching NOT contained in e must be rejected: sum of nontrivial
+    # cyclic shifts has a zero diagonal, so the identity is not in it
+    shifts = np.stack([(np.arange(n) + s) % n for s in (1, 2, 3)])
+    e2 = np.zeros((n, n), dtype=np.int64)
+    for p in shifts:
+        e2[idx, p] += 1
+    with pytest.raises(ValueError):
+        decompose_matchings_euler(e2, known=np.arange(n)[None, :])
+
+
+@pytest.mark.parametrize("n,d", [(10, 12), (7, 9), (12, 24), (9, 15)])
+def test_euler_at_most_one_hk_peel(n, d, monkeypatch):
+    """Regression: the odd-D path must not Hopcroft-Karp-peel at every
+    recursion level (worst case O(D) peels).  At most one peel per
+    decomposition — only to even an odd top-level D; odd regularity at
+    deeper levels is resolved matching-free."""
+    import repro.core.matching as M
+
+    calls = {"n": 0}
+    real = M.extract_perfect_matching
+
+    def counting(e):
+        calls["n"] += 1
+        return real(e)
+
+    monkeypatch.setattr(M, "extract_perfect_matching", counting)
+    rng = np.random.default_rng(n * d)
+    e = random_regular(n, d, rng)
+    _check(e, M.decompose_matchings_euler(e))
+    assert calls["n"] <= 1, f"{calls['n']} HK peels for D={d}"
+    if d % 2 == 0:
+        assert calls["n"] == 0      # even D never needs the peel
+
+
+def test_euler_split_halves_regular():
+    """The stub-array _euler_split: even-regular e -> two D/2-regular
+    halves that sum back to e."""
+    from repro.core.matching import _euler_split
+
+    rng = np.random.default_rng(3)
+    e = random_regular(13, 8, rng)
+    a, b = _euler_split(e)
+    assert (a + b == e).all()
+    for half in (a, b):
+        assert (half.sum(axis=1) == 4).all()
+        assert (half.sum(axis=0) == 4).all()
+
+
+def test_euler_large_multigraph_with_multiedges():
+    """Multi-edges and self-loops (configuration-model artifacts, and
+    identity permutations respectively) survive the fast path."""
+    rng = np.random.default_rng(9)
+    n = 30
+    e = random_regular(n, 8, rng) * 2           # heavy parallel edges
+    e += np.eye(n, dtype=np.int64) * 3          # self-loop triples
+    _check(e, decompose_matchings_euler(e))

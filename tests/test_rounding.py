@@ -4,7 +4,7 @@ import pytest
 
 from conftest import given, settings, st  # hypothesis or offline fallback
 
-from repro.core.rounding import round_matrix, check_rounding
+from repro.core.rounding import round_matrix, round_matrices, check_rounding
 from repro.core.traffic import random_hose
 
 
@@ -28,6 +28,42 @@ def test_rectangular():
     rng = np.random.default_rng(1)
     a = rng.random((3, 11)) * 4
     check_rounding(a, round_matrix(a))
+
+
+def test_check_rounding_rejects_bad_nonsquare():
+    """check_rounding must catch violations on rectangular inputs too."""
+    rng = np.random.default_rng(7)
+    a = rng.random((4, 9)) * 3
+    r = round_matrix(a)
+    check_rounding(a, r)                      # the real rounding passes
+    bad_entry = r.copy()
+    bad_entry[2, 5] += 2                      # outside floor/ceil
+    with pytest.raises(AssertionError):
+        check_rounding(a, bad_entry)
+    bad_row = np.ceil(a).astype(np.int64)     # every entry up: row sums blow
+    bad_row[0, 0] += 1
+    with pytest.raises(AssertionError):
+        check_rounding(a, bad_row)
+
+
+def test_round_matrices_batched_matches_properties():
+    """One block-diagonal flow call rounds a whole batch, each member
+    carrying the full Bacharach guarantees; mixed shapes allowed."""
+    rng = np.random.default_rng(11)
+    mats = [rng.gamma(0.7, 2.0, size=(n, n)) * (rng.random((n, n)) < 0.6)
+            for n in (4, 9, 13)]
+    mats.append(rng.random((3, 11)) * 4)
+    mats.append(np.zeros((5, 5)))
+    mats.append(rng.integers(0, 6, size=(6, 6)).astype(float))
+    outs = round_matrices(mats)
+    assert len(outs) == len(mats)
+    for a, r in zip(mats, outs):
+        check_rounding(a, r)
+    assert (outs[4] == 0).all()
+    assert (outs[5] == mats[5]).all()         # integer input is fixed point
+    # batched equals the solo call's guarantees on identical input
+    solo = round_matrix(mats[0])
+    check_rounding(mats[0], solo)
 
 
 @pytest.mark.parametrize("seed", range(12))

@@ -75,6 +75,54 @@ def test_spread_preserves_multiset():
     assert sorted(map(tuple, sp.tolist())) == sorted(map(tuple, s.perms.tolist()))
 
 
+def test_spread_preserves_emulated_capacity():
+    """Reordering matchings must not move a single bit of emulated
+    capacity (the period is a multiset of matchings)."""
+    n = 10
+    m = T.random_hose(n, seed=6)
+    plain = vermilion_schedule(m, k=3, d_hat=2, recfg_frac=1 / 9,
+                               spread=False)
+    spun = Schedule(perms=spread_matchings(plain.perms), d_hat=2,
+                    recfg_frac=1 / 9)
+    assert np.array_equal(plain.emulated_capacity(3.7),
+                          spun.emulated_capacity(3.7))
+    assert (plain.edge_counts() == spun.edge_counts()).all()
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_method_golden_equivalence(seed):
+    """Acceptance: both decomposition methods produce schedules with
+    identical regularity and emulated capacity (they decompose the same
+    emulated multigraph; only matching order/split may differ)."""
+    n = 14
+    m = T.random_hose(n, seed=seed)
+    se = vermilion_schedule(m, k=3, d_hat=2, seed=seed, method="euler")
+    sh = vermilion_schedule(m, k=3, d_hat=2, seed=seed, method="hk")
+    assert se.T == sh.T == 3 * n                       # same regularity
+    for s in (se, sh):
+        for p in s.perms:
+            assert sorted(p.tolist()) == list(range(n))
+    assert (se.edge_counts() == sh.edge_counts()).all()
+    assert np.array_equal(se.emulated_capacity(), sh.emulated_capacity())
+    with pytest.raises(ValueError):
+        vermilion_schedule(m, method="bogus")
+
+
+def test_slot_circuits_matches_dense_capacity():
+    """The sparse per-slot plan is entry-for-entry (incl. float bits) what
+    nonzero() on the dense capacity tensor yields."""
+    s = vermilion_schedule(T.random_hose(9, seed=2), k=3, d_hat=2,
+                           recfg_frac=1 / 9, seed=2)
+    caps = s.capacity_per_slot(2.5)
+    plans = s.slot_circuits(2.5)
+    assert len(plans) == s.n_slots == caps.shape[0]
+    for ps, (src, dst, cap) in enumerate(plans):
+        at, v = np.nonzero(caps[ps])
+        assert np.array_equal(src, at)
+        assert np.array_equal(dst, v)
+        assert np.array_equal(cap, caps[ps][at, v])
+
+
 def test_greedy_schedule():
     n = 8
     m = T.ring(n)
