@@ -113,6 +113,30 @@ def run_charging(n: int = 32, d_hat: int = 2, load: float = 0.5,
     ], BITS_PER_SLOT)
 
 
+def run_epoch_tradeoff(n: int = 16, d_hat: int = 4, load: float = 0.5,
+                       horizon: int = 6000, shift_period: int = 2000,
+                       epoch_grid: tuple[int, ...] = (100, 250, 500, 1000),
+                       penalties: tuple[int, ...] = (0, 25, 100),
+                       seed: int = 1) -> list[AdaptiveRow]:
+    """Epoch-length x reconfiguration-cost tradeoff (see
+    ``AdaptiveCase.reconfig_penalty_slots``): every hot-swap darkens the
+    fabric for the penalty window, so short epochs track phase shifts
+    faster but pay the dark window more often — the optimum epoch length
+    grows with the penalty.  One workload, one grid, one ``run_adaptive``
+    call."""
+    wl = phase_shifting_workload(
+        n, load, horizon, BITS_PER_SLOT, d_hat=d_hat, seed=seed,
+        phases=PHASES, shift_period=shift_period)
+    cases = [
+        AdaptiveCase(wl=wl, epoch_slots=E, policy="adaptive", d_hat=d_hat,
+                     recfg_frac=RECFG, seed=seed, alpha=0.5,
+                     reconfig_penalty_slots=p, label=f"E{E}-dark{p}",
+                     meta={"epoch_slots": E, "penalty": p})
+        for p in penalties for E in epoch_grid
+    ]
+    return run_adaptive(cases, BITS_PER_SLOT)
+
+
 def main(argv: list[str] | None = None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--n", type=int, default=16)
@@ -169,7 +193,22 @@ def main(argv: list[str] | None = None):
               f"util={r.utilization:.3f};stale_slots={row.stale_slots};"
               f"recomputes={row.recomputes};"
               f"constr_ms={row.construction_s * 1e3:.0f}")
-    return rows, charged
+
+    tradeoff = run_epoch_tradeoff()
+    best_by_p: dict[int, AdaptiveRow] = {}
+    for row in tradeoff:
+        print(f"adaptive_tradeoff[{row.label}],{row.sim_s * 1e6:.0f},"
+              f"util={row.result.utilization:.3f};"
+              f"dark_slots={row.dark_slots};recomputes={row.recomputes}")
+        p = row.meta["penalty"]
+        if (p not in best_by_p
+                or row.result.utilization > best_by_p[p].result.utilization):
+            best_by_p[p] = row
+    print("# epoch tradeoff: best epoch length per reconfig penalty: "
+          + ", ".join(f"dark={p} -> E{best_by_p[p].meta['epoch_slots']} "
+                      f"(util {best_by_p[p].result.utilization:.3f})"
+                      for p in sorted(best_by_p)))
+    return rows, charged, tradeoff
 
 
 if __name__ == "__main__":

@@ -3,9 +3,13 @@ websearch workload, 5%..70% load, all systems.
 
 The whole load x system grid goes through :func:`repro.core.simulator.run_sweep`
 in one call — single-hop systems advance through the sparse batched engine,
-rotorlb/vlb through the dense-relay engine.  ``main`` also prints a
-before/after timing table against the pre-vectorization reference engine
-(``--no-timing`` skips it; ``--timing-n`` sets the node count, default 64).
+rotorlb/vlb through the dense-relay engine.  ``--backend jax`` runs the same
+grid through the jitted lax.scan kernels (aggregates only — FCT columns go
+nan).  ``main`` also prints a before/after timing table against the
+pre-vectorization reference engine (``--no-timing`` skips it; ``--timing-n``
+sets the node count, default 64).  :func:`twohop_table` times the two-hop
+relay engine numpy-vs-jax per (n, mode) with min-of-N wall clocks — the rows
+``benchmarks/run.py`` persists to ``results/BENCH_twohop.json``.
 """
 from __future__ import annotations
 
@@ -61,21 +65,82 @@ def build_grid(n: int, d_hat: int, horizon: int, loads=LOADS,
 
 
 def run(n: int = 16, d_hat: int = 4, horizon: int = 4000,
-        loads=LOADS, seed: int = 1) -> list[dict]:
+        loads=LOADS, seed: int = 1, backend: str = "numpy") -> list[dict]:
     rows = []
     for sr in run_sweep(build_grid(n, d_hat, horizon, loads, seed),
-                        BITS_PER_SLOT):
+                        BITS_PER_SLOT, backend=backend):
         r = sr.result
         rows.append({
             "system": sr.label, "load": sr.meta["load"],
+            "backend": backend,
             "p99_short": r.fct_percentile(99, short_cutoff=SHORT),
             "p99_long": r.fct_percentile(99, long_cutoff=LONG),
             "p50_short": r.fct_percentile(50, short_cutoff=SHORT),
             "util": r.utilization,
-            "done": r.completed_frac,
+            # the jax backend tracks aggregates only: completed_frac over
+            # its all-inf fct_slots would read 0.0 (a completion collapse
+            # that never happened) — report nan like the FCT columns
+            "done": float("nan") if backend == "jax" else r.completed_frac,
             "hops": r.avg_hops,
             "us": sr.sim_s * 1e6,
         })
+    return rows
+
+
+def twohop_table(ns=(32, 64, 128, 256), d_hat: int = 2, horizon: int = 300,
+                 load: float = 0.4, repeats: int = 3,
+                 seed: int = 1) -> list[dict]:
+    """Two-hop relay engine wall-clock per (n, mode, backend), min-of-N.
+
+    The jax backend is warmed up once per shape before timing so the
+    min-of-N excludes compilation; the numpy engine has no compile to
+    exclude.  Rows feed ``results/BENCH_twohop.json`` (the cross-PR perf
+    trajectory for the relay data plane).  Skips the jax rows (with a
+    note) when jax is not installed.
+    """
+    try:
+        import jax  # noqa: F401
+        have_jax = True
+    except ImportError:
+        have_jax = False
+    rows = []
+    print(f"# twohop engine timing: websearch uniform load={load} "
+          f"d_hat={d_hat} horizon={horizon} (min of {repeats})")
+    print("name,us_per_call,derived")
+    for n in ns:
+        wl = websearch_workload(n, load, horizon, BITS_PER_SLOT,
+                                d_hat=d_hat, seed=seed, pattern="uniform")
+        sched = oblivious_schedule(n, d_hat=d_hat, recfg_frac=RECFG)
+        for mode in ("rotorlb", "vlb"):
+            cases = [SweepCase(sched, wl, mode, mode)]
+            base: dict[str, float] = {}
+            for backend in ("numpy", "jax"):
+                if backend == "jax":
+                    if not have_jax:
+                        print(f"# twohop[{mode},n={n},jax] skipped: "
+                              "jax not installed")
+                        continue
+                    run_sweep(cases, BITS_PER_SLOT, backend="jax")  # warmup
+                best, row = None, None
+                for _ in range(repeats):
+                    t0 = time.perf_counter()
+                    sr = run_sweep(cases, BITS_PER_SLOT, backend=backend)[0]
+                    dt = time.perf_counter() - t0
+                    if best is None or dt < best:
+                        best, row = dt, sr
+                base[backend] = best
+                speedup = base["numpy"] / best
+                rows.append({
+                    "n": n, "mode": mode, "backend": backend,
+                    "horizon": horizon, "seconds": best,
+                    "speedup_vs_numpy": speedup,
+                    "util": row.result.utilization,
+                    "avg_hops": row.result.avg_hops,
+                })
+                print(f"twohop[{mode},n={n},{backend}],{best * 1e6:.0f},"
+                      f"speedup={speedup:.1f}x;"
+                      f"util={row.result.utilization:.3f};"
+                      f"hops={row.result.avg_hops:.2f}")
     return rows
 
 
@@ -117,18 +182,24 @@ def main(argv: list[str] | None = None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--n", type=int, default=16)
     ap.add_argument("--horizon", type=int, default=4000)
+    ap.add_argument("--backend", choices=("numpy", "jax"), default="numpy")
     ap.add_argument("--no-timing", action="store_true")
     ap.add_argument("--timing-n", type=int, default=64)
+    ap.add_argument("--twohop-timing", action="store_true",
+                    help="also run the numpy-vs-jax twohop_table")
     args = ap.parse_args(argv)
 
-    rows = run(n=args.n, horizon=args.horizon)
+    rows = run(n=args.n, horizon=args.horizon, backend=args.backend)
     print("name,us_per_call,derived")
     for r in rows:
-        print(f"fct_fig5[{r['system']},load={r['load']}],{r['us']:.0f},"
+        print(f"fct_fig5[{r['system']},load={r['load']},{r['backend']}],"
+              f"{r['us']:.0f},"
               f"p99short={r['p99_short']:.0f};p99long={r['p99_long']:.0f};"
               f"util={r['util']:.3f};done={r['done']:.3f};hops={r['hops']:.2f}")
     if not args.no_timing:
         timing_table(n=args.timing_n)
+    if args.twohop_timing:
+        twohop_table()
 
 
 if __name__ == "__main__":

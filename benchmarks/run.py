@@ -13,7 +13,10 @@ Persists the perf trajectory for cross-PR tracking:
   - results/BENCH_schedule.json — construction latency per method per n
     (per-stage breakdown + hk/euler end-to-end speedup)
   - results/BENCH_adaptive.json — closed-loop utilization, with and
-    without construction charging
+    without construction charging, plus the epoch-length x
+    reconfiguration-penalty tradeoff grid
+  - results/BENCH_twohop.json — two-hop relay engine wall-clock per
+    (n, mode, backend), numpy vs jax (min-of-N)
 """
 from __future__ import annotations
 
@@ -33,8 +36,10 @@ def _adaptive_row_json(row) -> dict:
         "completed_frac": r.completed_frac,
         "recomputes": row.recomputes,
         "stale_slots": row.stale_slots,
+        "dark_slots": row.dark_slots,
         "construction_s": row.construction_s,
         "sim_s": row.sim_s,
+        "meta": row.meta,
     }
 
 
@@ -55,7 +60,10 @@ def main() -> None:
     fct_bench.main([])
     sys.stdout.flush()
 
-    adaptive_rows, charged_rows = adaptive_bench.main([])
+    adaptive_rows, charged_rows, tradeoff_rows = adaptive_bench.main([])
+    sys.stdout.flush()
+
+    twohop_rows = fct_bench.twohop_table()
     sys.stdout.flush()
 
     sched_rows = schedule_time.main([])
@@ -69,7 +77,10 @@ def main() -> None:
     (RESULTS / "BENCH_adaptive.json").write_text(json.dumps({
         "sweep": [_adaptive_row_json(r) for r in adaptive_rows],
         "charged": [_adaptive_row_json(r) for r in charged_rows],
+        "epoch_tradeoff": [_adaptive_row_json(r) for r in tradeoff_rows],
     }, indent=2) + "\n")
+    (RESULTS / "BENCH_twohop.json").write_text(
+        json.dumps(twohop_rows, indent=2) + "\n")
 
     # roofline summary (analytic three terms per assigned cell)
     from .analytic import cell_cost

@@ -51,9 +51,18 @@ through one slot loop with a leading batch axis:
 5. **Sweep API.**  :func:`run_sweep` takes a list of
    ``(schedule, workload, mode)`` cases (see :class:`SweepCase`), batches
    single-hop and two-hop groups through the engines above, so one call
-   evaluates an ``n × load × mode`` grid.  ``backend="jax"`` runs the
-   single-hop aggregate dynamics as a ``jax.lax.scan`` (utilization /
-   delivered-bits only — per-flow FCTs stay on the NumPy path).
+   evaluates an ``n × load × mode`` grid.  ``backend="jax"`` covers every
+   routing mode with jitted ``jax.lax.scan`` kernels (utilization /
+   delivered-bits / avg-hops only — per-flow FCTs stay on the NumPy
+   path): single-hop cases run the aggregate VOQ kernel; rotorlb/vlb
+   cases run the two-hop relay kernel, which carries relay state as
+   per-(at, dst) bucket *totals* (the source-attribution axis exists only
+   to credit flows, so it drops out of the aggregate dynamics exactly)
+   and picks between a dense einsum formulation (small n) and padded
+   circuit-support gathers + ``segment_sum`` over the same
+   :class:`_SupportPlans` LUT the NumPy engine uses (large n).  Kernels
+   jit once per padded shape bucket through a module-level compile cache
+   — repeated same-shape sweeps never retrace.
 
 6. **Adaptive epoch layer.**  :func:`run_adaptive` (see
    :class:`AdaptiveCase`) closes the paper's estimation→schedule control
@@ -592,11 +601,8 @@ class _CreditState:
                 self._compact()
 
 
-def _support_plan(
-    caps_list: list[np.ndarray], n: int, tmap: list[int], B: int
-) -> "callable":
-    """Build a per-slot circuit-support plan provider for the two-hop cases
-    of a batch.
+class _SupportPlans:
+    """Per-slot circuit-support plans for the two-hop cases of a batch.
 
     Per (two-hop case, period slot), the <= n*d_hat (at, dst) pairs with
     nonzero capacity; relay drain/fill only ever touches these rows
@@ -606,37 +612,48 @@ def _support_plan(
     (global) address the shared cap/voq/delivered tensors; ``row_l`` /
     ``bv_l`` (local) address the relay tensor, which only exists for
     two-hop cases.  The merged plan for a slot depends only on
-    ``slot % ns_b`` per case, so plans are memoized on that residue tuple.
+    ``slot % ns_b`` per case (the residue tuple :meth:`key`), so plans are
+    memoized on that tuple.
+
+    One builder serves both backends: the NumPy relay loop consumes the
+    memoized merged dicts (:meth:`plan`), the JAX backend densifies the
+    same merged plans into its padded ``(plan, J_pad)`` LUT, deduplicated
+    by :meth:`key` and scanned by per-slot plan index.
     """
-    ns = [caps_list[g].shape[0] for g in tmap]
-    per_case: list[list[dict]] = []
-    for b2, g in enumerate(tmap):
-        plans = []
-        for ps in range(caps_list[g].shape[0]):
-            at, v = np.nonzero(caps_list[g][ps])    # lex-sorted by (at, v)
-            plans.append({
-                "J": len(at), "b": np.full(len(at), g),
-                "row": g * n + at, "v": v, "bv": g * n + v,
-                "row_l": b2 * n + at, "bv_l": b2 * n + v, "at": at,
-            })
-        per_case.append(plans)
 
-    memo: dict[tuple, dict] = {}
-    keys_cat = ("b", "row", "v", "bv", "row_l", "bv_l", "at")
+    _CAT = ("b", "row", "v", "bv", "row_l", "bv_l", "at")
 
-    def plan_for(slot: int) -> dict:
-        key = tuple(slot % p for p in ns)
-        plan = memo.get(key)
+    def __init__(self, caps_list: list[np.ndarray], n: int,
+                 tmap: list[int], B: int):
+        self.ns = [caps_list[g].shape[0] for g in tmap]
+        self.per_case: list[list[dict]] = []
+        for b2, g in enumerate(tmap):
+            plans = []
+            for ps in range(caps_list[g].shape[0]):
+                at, v = np.nonzero(caps_list[g][ps])  # lex-sorted by (at, v)
+                plans.append({
+                    "J": len(at), "b": np.full(len(at), g),
+                    "row": g * n + at, "v": v, "bv": g * n + v,
+                    "row_l": b2 * n + at, "bv_l": b2 * n + v, "at": at,
+                })
+            self.per_case.append(plans)
+        self._memo: dict[tuple, dict] = {}
+
+    def key(self, slot: int) -> tuple:
+        return tuple(slot % p for p in self.ns)
+
+    def plan(self, slot: int) -> dict:
+        key = self.key(slot)
+        plan = self._memo.get(key)
         if plan is not None:
             return plan
-        sd = [per_case[b2][key[b2]] for b2 in range(len(tmap))]
-        plan = {k: np.concatenate([d[k] for d in sd]) for k in keys_cat}
+        sd = [self.per_case[b2][key[b2]]
+              for b2 in range(len(self.per_case))]
+        plan = {k: np.concatenate([d[k] for d in sd]) for k in self._CAT}
         plan["J"] = int(sum(d["J"] for d in sd))
-        if len(memo) < 1024:       # bound memory for long aperiodic batches
-            memo[key] = plan
+        if len(self._memo) < 1024:  # bound memory for long aperiodic batches
+            self._memo[key] = plan
         return plan
-
-    return plan_for
 
 
 def _concat_flows(
@@ -787,7 +804,7 @@ def _simulate_batch(
     tmap = [b for b, m in enumerate(modes) if m in ("rotorlb", "vlb")]
     two_hop = bool(tmap)
     if two_hop:
-        plan_for = _support_plan(caps_list, n, tmap, B)
+        plan_for = _SupportPlans(caps_list, n, tmap, B).plan
         direct_mask = np.array(
             [0.0 if m == "vlb" else 1.0 for m in modes])[:, None, None]
         all_direct = bool(np.all(direct_mask == 1.0))
@@ -961,9 +978,13 @@ def run_sweep(
     Single-hop cases (per node count) advance through one sparse batched
     slot loop, two-hop cases (``rotorlb`` / ``vlb`` mix freely) through one
     dense-relay loop; results come back in input order.  With
-    ``backend="jax"``, single-hop cases run the aggregate VOQ dynamics as a
-    ``jax.lax.scan`` on the accelerator — utilization and delivered bits
-    only, ``fct_slots`` is all-inf (use the NumPy backend for FCTs).
+    ``backend="jax"``, every routing mode runs as a jitted ``jax.lax.scan``
+    on the accelerator — single-hop cases through the aggregate VOQ kernel,
+    two-hop cases through the relay kernel (dense einsum at small n, padded
+    circuit-support gathers + segment_sum beyond) — utilization, delivered
+    bits, and avg_hops only; ``fct_slots`` is all-inf (use the NumPy
+    backend for FCTs).  The kernels jit once per padded shape signature, so
+    repeated same-shape sweeps never recompile.
     """
     if backend not in ("numpy", "jax"):
         raise ValueError(backend)
@@ -977,8 +998,9 @@ def run_sweep(
         batch = [(cases[i].sched, cases[i].wl) for i in idxs]
         modes = [cases[i].mode for i in idxs]
         t0 = time.perf_counter()
-        if single and backend == "jax":
-            results = _aggregate_batch_jax(batch, bits_per_slot)
+        if backend == "jax":
+            results = (_aggregate_batch_jax(batch, bits_per_slot) if single
+                       else _twohop_batch_jax(batch, bits_per_slot, modes))
         elif single:
             results = _simulate_batch_singlehop(batch, bits_per_slot)
         else:
@@ -1056,6 +1078,18 @@ class AdaptiveCase:
     (``"euler"`` fast path vs ``"hk"`` reference) — combined with
     ``construction_slots="measured"`` this exposes the construction-latency
     tradeoff end to end.
+
+    ``reconfig_penalty_slots`` charges the optical fabric's reconfiguration
+    at each hot-swap: for that many slots after a new schedule activates,
+    every circuit is dark (no capacity; arrivals, VOQ counters, and the
+    slot rotation keep running).  Distinct from per-slot ``recfg_frac``
+    (the within-slot guard band) and from ``construction_slots`` (computing
+    the schedule): this is the cost of physically retargeting the switches,
+    paid even for an instantly-computed schedule.  Default 0 keeps the
+    epoch-layer dynamics bit-identical to the uncharged loop.  Together
+    with ``epoch_slots`` it exposes the epoch-length tradeoff (short epochs
+    track phases faster but pay the dark window more often) — swept in
+    ``benchmarks/adaptive_bench.py run_epoch_tradeoff()``.
     """
 
     wl: Workload
@@ -1072,6 +1106,7 @@ class AdaptiveCase:
     construction_slots: int | str = 0
     slot_seconds: float = 4.5e-6
     method: str = "euler"
+    reconfig_penalty_slots: int = 0
     label: str = ""
     meta: dict = field(default_factory=dict)
 
@@ -1090,6 +1125,8 @@ class AdaptiveRow:
     stale_slots: int = 0            # slots served by an outdated schedule
                                     # while construction was still running
     construction_s: float = 0.0     # wall-clock spent constructing schedules
+    dark_slots: int = 0             # slots lost to reconfiguration darkness
+                                    # (reconfig_penalty_slots per hot-swap)
 
 
 def _run_adaptive_case(case: AdaptiveCase, bits_per_slot: float) -> AdaptiveRow:
@@ -1104,6 +1141,9 @@ def _run_adaptive_case(case: AdaptiveCase, bits_per_slot: float) -> AdaptiveRow:
             "construction_slots must be a nonnegative int or 'measured'")
     if measured and case.slot_seconds <= 0:
         raise ValueError("slot_seconds must be positive")
+    penalty = int(case.reconfig_penalty_slots)
+    if penalty < 0:
+        raise ValueError("reconfig_penalty_slots must be nonnegative")
     wl, n = case.wl, case.wl.n
     E, H = case.epoch_slots, wl.horizon
     n_epochs = -(-H // E)
@@ -1166,12 +1206,15 @@ def _run_adaptive_case(case: AdaptiveCase, bits_per_slot: float) -> AdaptiveRow:
     est_tv = np.full(n_epochs, np.nan)
     recomputes = 0
     stale_slots = 0
+    dark_until = 0                  # circuits dark while switches retarget
+    dark_slots = 0
 
     for slot in range(H):
         if pending is not None and slot >= pending[0]:
             sched = pending[1]
             plans, sched_t0 = support_plans(sched), slot
             pending = None
+            dark_until = slot + penalty
         if slot and slot % E == 0:
             epoch = slot // E
             swap = None
@@ -1195,6 +1238,7 @@ def _run_adaptive_case(case: AdaptiveCase, bits_per_slot: float) -> AdaptiveRow:
                 if charge == 0:
                     sched, plans, sched_t0 = swap, support_plans(swap), slot
                     pending = None   # a zero-cost swap supersedes any pending
+                    dark_until = slot + penalty
                 else:
                     # the stale schedule keeps serving until construction
                     # finishes; a recompute next epoch supersedes this one
@@ -1209,6 +1253,9 @@ def _run_adaptive_case(case: AdaptiveCase, bits_per_slot: float) -> AdaptiveRow:
             np.add.at(counters, (wl.src[newf], wl.dst[newf]), f_size[newf])
             credit.arrive(newf)
 
+        if slot < dark_until:       # reconfiguring: no circuits this slot
+            dark_slots += 1
+            continue
         spid, scap = plans[(slot - sched_t0) % len(plans)]
         q = voq[spid]
         tx = np.minimum(q, scap)
@@ -1230,7 +1277,8 @@ def _run_adaptive_case(case: AdaptiveCase, bits_per_slot: float) -> AdaptiveRow:
         label=case.label, policy=case.policy, result=result,
         epoch_utilization=delivered_ep / ep_cap, epoch_estimate_tv=est_tv,
         recomputes=recomputes, sim_s=0.0, meta=dict(case.meta),
-        stale_slots=stale_slots, construction_s=construction_s)
+        stale_slots=stale_slots, construction_s=construction_s,
+        dark_slots=dark_slots)
 
 
 def run_adaptive(
@@ -1256,60 +1304,363 @@ def run_adaptive(
     return rows
 
 
-def _aggregate_batch_jax(
-    cases: list[tuple[Schedule, Workload]], bits_per_slot: float
-) -> list[SimResult]:
-    """Single-hop aggregate dynamics for a batch via ``jax.lax.scan``.
+# ---------------------------------------------------------------------------
+# JAX backend: jitted scan kernels + shared compile cache
+# ---------------------------------------------------------------------------
 
-    Flow-completion times are not tracked (fct_slots all inf); delivered
-    bits / utilization match the NumPy engine.
-    """
+# The kernels are built (and jit-wrapped) ONCE per process, so jax's own
+# shape-keyed trace cache persists across run_sweep calls: repeated
+# same-shape sweeps reuse the compiled executable instead of retracing the
+# scan body each call.  All inputs are padded into shape buckets so
+# near-miss sizes share a compile — one compile per (B, n, H_pad, ...)
+# signature.  _JAX_TRACES counts actual retraces (the kernel's Python body
+# only runs while jax traces it); a regression test pins it.
+_JAX_FNS: dict[str, "callable"] = {}
+_JAX_TRACES = {"agg": 0, "twohop_dense": 0, "twohop_sparse": 0}
+
+_PAD_H = 128         # horizon           -> multiple of 128 slots
+_PAD_K = 32          # arrivals per slot -> multiple of 32 flows
+_PAD_J = 64          # circuit support   -> multiple of 64 pairs
+
+# Dense (einsum over the full (B, n, n) relay-bucket matrix) vs sparse
+# (padded circuit-support gathers + segment_sum) two-hop kernel crossover,
+# picked by n like ``round_matrices`` picks its batching: the dense step's
+# O(n^3) offload einsum lowers to a batched matmul and beats the sparse
+# step's O(n^2 d_hat) scalarized gather/scatter constants until n is large
+# (benchmarks/fct_bench.py ``twohop_table`` on the 2-core CI CPU: dense
+# ~1.6x ahead at n = 128, ~par at 256, behind from n ~ 384 on).
+_TWOHOP_DENSE_MAX_N = 256
+
+_JEPS = 1e-12
+
+
+def _pad_to(x: int, q: int) -> int:
+    return max(q, -(-x // q) * q)
+
+
+def _jax_fns() -> dict:
+    """Build (once) the jitted scan kernels behind ``backend="jax"``."""
+    if _JAX_FNS:
+        return _JAX_FNS
     import jax
     import jax.numpy as jnp
 
+    def agg(caps_flat, cap_idx, arr, live):
+        _JAX_TRACES["agg"] += 1
+        B, n = arr.shape[1], arr.shape[2]
+
+        def step(voq, inp):
+            idx, a, lv = inp
+            voq = voq + a
+            cap = caps_flat[idx] * lv[:, None, None]
+            tx = jnp.minimum(voq, cap)
+            return voq - tx, tx.sum(axis=(1, 2))
+
+        _, delivered = jax.lax.scan(
+            step, jnp.zeros((B, n, n), jnp.float32), (cap_idx, arr, live))
+        return delivered
+
+    # Both two-hop kernels carry relay state as per-(at, dst) bucket
+    # TOTALS only (the NumPy engine's maintained RS array, without the
+    # per-source relay tensor behind it): the jax backend reports
+    # aggregates, so the source-attribution axis — which exists in the
+    # NumPy engine purely to credit per-flow completions, and whose
+    # strided drain kept the PR 1 two-hop speedup under target — drops
+    # out exactly.  Every transferred quantity below (drain = min(total,
+    # cap), offload splits, immediate landings) depends on bucket totals
+    # alone, so delivered bits / second-hop bits match the full engine
+    # float-for-float while the scan carry shrinks from O(B n^3) to
+    # O(B n^2) and the strided scatters disappear entirely.
+
+    def twohop_dense(caps_flat, cap_idx, apos, asz, live, direct):
+        _JAX_TRACES["twohop_dense"] += 1
+        B, n = cap_idx.shape[1], caps_flat.shape[1]
+
+        def step(carry, inp):
+            voq, RS = carry                      # RS[b, at, dst] totals
+            cidx, pos, sz, lv = inp
+            voq = voq.at[pos[:, 0], pos[:, 1], pos[:, 2]].add(sz)
+            cap = caps_flat[cidx] * lv[:, None, None]
+            # priority 1: second-hop relay traffic (at u, destined v)
+            send1 = jnp.minimum(RS, cap)
+            RS = RS - send1
+            second = send1.sum(axis=(1, 2))
+            deliv = second
+            cap = cap - send1
+            tx = jnp.minimum(voq, cap) * direct  # vlb: no direct hop
+            voq = voq - tx
+            deliv = deliv + tx.sum(axis=(1, 2))
+            cap = cap - tx
+            # offload leftover capacity: proportional spray into relays;
+            # moved[u, v, d] = send_u * link_share[u, v] * q_share[u, d],
+            # summed over u straight into the relay buckets
+            leftover = cap.sum(axis=2)
+            queue = voq.sum(axis=2)
+            send_u = jnp.minimum(leftover, queue)
+            ls = jnp.where(leftover[:, :, None] > _JEPS,
+                           cap / jnp.maximum(leftover, _JEPS)[:, :, None],
+                           0.0)
+            qs = jnp.where(queue[:, :, None] > _JEPS,
+                           voq / jnp.maximum(queue, _JEPS)[:, :, None], 0.0)
+            mvd = jnp.einsum("buv,bud->bvd", send_u[:, :, None] * ls, qs)
+            voq = jnp.maximum(voq - send_u[:, :, None] * qs, 0.0)
+            # bits whose relay node IS the destination arrive at once
+            diag = jnp.diagonal(mvd, axis1=1, axis2=2)     # mvd[b, v, v]
+            deliv = deliv + diag.sum(axis=1)
+            mvd = mvd * (1.0 - jnp.eye(n, dtype=mvd.dtype))
+            RS = RS + mvd
+            return (voq, RS), (deliv, second)
+
+        _, out = jax.lax.scan(
+            step,
+            (jnp.zeros((B, n, n), jnp.float32),
+             jnp.zeros((B, n, n), jnp.float32)),
+            (cap_idx, apos, asz, live))
+        return out
+
+    def twohop_sparse(caps_flat, cap_idx, apos, asz, live, plan_idx,
+                      p_row, p_v, p_b, p_valid, direct):
+        _JAX_TRACES["twohop_sparse"] += 1
+        B, n = cap_idx.shape[1], caps_flat.shape[1]
+
+        def step(carry, inp):
+            # RS[(b, at), dst]: row-major bucket totals, so the drain reads
+            # and the offload fill both land on contiguous rows.  Padded
+            # support entries carry valid=False -> zero capacity -> every
+            # transfer below is an exact add-zero for them.
+            voq, RS = carry
+            cidx, pos, sz, lv, pi = inp
+            voq = voq.at[pos[:, 0], pos[:, 1], pos[:, 2]].add(sz)
+            cap3 = (caps_flat[cidx] * lv[:, None, None]).reshape(B * n, n)
+            row, v, b, valid = p_row[pi], p_v[pi], p_b[pi], p_valid[pi]
+            bv = b * n + v
+            # priority 1: drain relayed bits over the support circuits
+            rs = jnp.where(valid, RS[row, v], 0.0)
+            cap_j = jnp.where(valid, cap3[row, v], 0.0)
+            send1 = jnp.minimum(rs, cap_j)
+            RS = RS.at[row, v].add(-send1)
+            cap3 = cap3.at[row, v].add(-send1)
+            second = jax.ops.segment_sum(send1, b, num_segments=B)
+            deliv = second
+            # direct hop (vlb cases masked)
+            cap = cap3.reshape(B, n, n)
+            tx = jnp.minimum(voq, cap) * direct
+            voq = voq - tx
+            deliv = deliv + tx.sum(axis=(1, 2))
+            cap3 = (cap - tx).reshape(B * n, n)
+            voq3 = voq.reshape(B * n, n)
+            # offload leftover capacity, support rows only
+            leftover = cap3.sum(axis=1)
+            queue = voq3.sum(axis=1)
+            send_u = jnp.minimum(leftover, queue)
+            lo_j = leftover[row]
+            ls = jnp.where(valid & (lo_j > _JEPS),
+                           cap3[row, v] / jnp.maximum(lo_j, _JEPS), 0.0)
+            coeff = send_u[row] * ls
+            q_j = queue[row]
+            qs = jnp.where((q_j > _JEPS)[:, None],
+                           voq3[row, :] / jnp.maximum(q_j, _JEPS)[:, None],
+                           0.0)
+            moved = coeff[:, None] * qs          # (J, n) over dst
+            dec = jax.ops.segment_sum(coeff, row, num_segments=B * n)
+            scale = jnp.where(queue > _JEPS,
+                              dec / jnp.maximum(queue, _JEPS), 0.0)
+            voq3 = jnp.maximum(voq3 - voq3 * scale[:, None], 0.0)
+            # bits whose relay node IS the destination arrive at once
+            dd = jnp.take_along_axis(moved, v[:, None], axis=1)[:, 0]
+            deliv = deliv + jax.ops.segment_sum(dd, b, num_segments=B)
+            moved = jnp.where(jnp.arange(n)[None, :] == v[:, None],
+                              0.0, moved)
+            RS = RS.at[bv, :].add(moved)         # -> bucket [(b, at v), dst]
+            return (voq3.reshape(B, n, n), RS), (deliv, second)
+
+        _, out = jax.lax.scan(
+            step,
+            (jnp.zeros((B, n, n), jnp.float32),
+             jnp.zeros((B * n, n), jnp.float32)),
+            (cap_idx, apos, asz, live, plan_idx))
+        return out
+
+    _JAX_FNS.update(
+        agg=jax.jit(agg),
+        twohop_dense=jax.jit(twohop_dense),
+        twohop_sparse=jax.jit(twohop_sparse),
+    )
+    return _JAX_FNS
+
+
+def _jax_batch_inputs(
+    cases: list[tuple[Schedule, Workload]], bits_per_slot: float
+):
+    """Shared numpy-side prep for the jax engines: the periodic capacity
+    LUT, per-slot liveness, and padded per-slot arrival scatter lists.
+
+    Horizon is padded to a ``_PAD_H`` bucket (padded slots carry zero
+    capacity, zero liveness, and no arrivals — exact no-ops), arrivals per
+    slot to a ``_PAD_K`` bucket (padding scatters 0 bits at pair (0,0,0)),
+    so the jit cache compiles once per bucket signature.
+    """
     B = len(cases)
     n = cases[0][1].n
+    for sched, wl in cases:
+        if wl.n != n:
+            raise ValueError("all workloads in a batch must share n")
+        if sched.n != n:
+            raise ValueError("schedule/workload size mismatch")
     horizons = np.array([wl.horizon for _, wl in cases], dtype=np.int64)
     H = int(horizons.max())
-    caps_list = [sched.capacity_per_slot(bits_per_slot) for sched, _ in cases]
+    H_pad = _pad_to(H, _PAD_H)
+
+    caps_list = [sched.capacity_per_slot(bits_per_slot)
+                 for sched, _ in cases]
     ns = np.array([c.shape[0] for c in caps_list], dtype=np.int64)
     offs = np.concatenate([[0], np.cumsum(ns[:-1])])
-    caps_flat = jnp.asarray(np.concatenate(caps_list, axis=0), jnp.float32)
-    cap_idx = jnp.asarray(
-        (offs[:, None] + (np.arange(H)[None, :] % ns[:, None])).T)  # (H, B)
-    live = jnp.asarray(
-        (np.arange(H)[:, None] < horizons[None, :]).astype(np.float32))
+    caps_flat = np.concatenate(caps_list, axis=0).astype(np.float32)
+    cap_idx = np.zeros((H_pad, B), dtype=np.int32)
+    cap_idx[:H] = offs[None, :] + (np.arange(H)[:, None] % ns[None, :])
+    live = np.zeros((H_pad, B), dtype=np.float32)
+    live[:H] = np.arange(H)[:, None] < horizons[None, :]
 
-    arr = np.zeros((H, B, n, n), dtype=np.float32)
-    for b, (_, wl) in enumerate(cases):
-        ok = wl.arrival < wl.horizon
-        np.add.at(arr, (wl.arrival[ok], b, wl.src[ok], wl.dst[ok]),
-                  wl.size[ok])
-    arr = jnp.asarray(arr)
+    f_item = np.concatenate(
+        [np.full(wl.num_flows, b, dtype=np.int64)
+         for b, (_, wl) in enumerate(cases)])
+    f_src = np.concatenate([wl.src for _, wl in cases]).astype(np.int64)
+    f_dst = np.concatenate([wl.dst for _, wl in cases]).astype(np.int64)
+    f_size = np.concatenate([wl.size for _, wl in cases]).astype(np.float64)
+    f_arr = np.concatenate([wl.arrival for _, wl in cases]).astype(np.int64)
+    valid = f_arr < horizons[f_item]
+    order = np.argsort(f_arr, kind="stable")
+    order = order[valid[order]]
+    bucket = np.searchsorted(f_arr[order], np.arange(H + 1))
+    counts = np.diff(bucket)
+    K = _pad_to(int(counts.max()) if counts.size else 0, _PAD_K)
+    apos = np.zeros((H_pad, K, 3), dtype=np.int32)
+    asz = np.zeros((H_pad, K), dtype=np.float32)
+    rows_i = np.repeat(np.arange(H), counts)
+    cols_i = _ranged_arange(counts)
+    apos[rows_i, cols_i, 0] = f_item[order]
+    apos[rows_i, cols_i, 1] = f_src[order]
+    apos[rows_i, cols_i, 2] = f_dst[order]
+    asz[rows_i, cols_i] = f_size[order]
+    return caps_list, caps_flat, cap_idx, apos, asz, live, H
 
-    def step(voq, inp):
-        idx, a, lv = inp
-        voq = voq + a
-        cap = caps_flat[idx] * lv[:, None, None]
-        tx = jnp.minimum(voq, cap)
-        return voq - tx, tx.sum(axis=(1, 2))
 
-    _, delivered = jax.lax.scan(
-        step, jnp.zeros((B, n, n), jnp.float32), (cap_idx, arr, live))
-    delivered_total = np.asarray(delivered.sum(axis=0), np.float64)
-
+def _jax_results(
+    cases, delivered, second, bits_per_slot, modes=None
+) -> list[SimResult]:
+    """Wrap per-slot jax outputs into SimResults (fct_slots all inf)."""
+    n = cases[0][1].n
+    delivered_total = np.asarray(delivered, np.float64).sum(axis=0)
+    second_total = (np.asarray(second, np.float64).sum(axis=0)
+                    if second is not None else None)
     out = []
     for b, (sched, wl) in enumerate(cases):
         offered = float(wl.size[wl.arrival < wl.horizon].sum())
         ideal = wl.horizon * n * sched.d_hat * bits_per_slot
+        two_hop = modes is not None and modes[b] in ("rotorlb", "vlb")
         out.append(SimResult(
             fct_slots=np.full(wl.num_flows, np.inf),
             flow_size=wl.size,
             utilization=float(delivered_total[b]) / ideal,
             delivered_bits=float(delivered_total[b]),
             offered_bits=offered,
+            avg_hops=1.0 + float(second_total[b])
+            / max(float(delivered_total[b]), 1e-9) if two_hop else 1.0,
         ))
     return out
+
+
+def _aggregate_batch_jax(
+    cases: list[tuple[Schedule, Workload]], bits_per_slot: float
+) -> list[SimResult]:
+    """Single-hop aggregate dynamics for a batch via a jitted
+    ``jax.lax.scan`` (compile cache shared with the two-hop kernels).
+
+    Flow-completion times are not tracked (fct_slots all inf); delivered
+    bits / utilization match the NumPy engine.
+    """
+    fns = _jax_fns()
+    B = len(cases)
+    n = cases[0][1].n
+    _, caps_flat, cap_idx, apos, asz, live, H = _jax_batch_inputs(
+        cases, bits_per_slot)
+    # aggregate dynamics are dense anyway: scatter the padded arrival
+    # lists into the (H_pad, B, n, n) per-slot arrival tensor
+    H_pad, K = asz.shape
+    arr = np.zeros((H_pad, B, n, n), dtype=np.float32)
+    np.add.at(arr, (np.repeat(np.arange(H_pad), K),
+                    apos[:, :, 0].ravel(), apos[:, :, 1].ravel(),
+                    apos[:, :, 2].ravel()), asz.ravel())
+    delivered = fns["agg"](caps_flat, cap_idx, arr, live)
+    return _jax_results(cases, delivered, None, bits_per_slot)
+
+
+def _twohop_batch_jax(
+    cases: list[tuple[Schedule, Workload]],
+    bits_per_slot: float,
+    modes: list[str],
+    kernel: str | None = None,
+) -> list[SimResult]:
+    """Two-hop (rotorlb / vlb, mixed freely) relay dynamics for a batch via
+    a jitted ``jax.lax.scan`` — the accelerated counterpart of
+    :func:`_simulate_batch`'s relay loop.
+
+    Aggregate quantities only (utilization / delivered bits / avg_hops
+    match the NumPy engine; fct_slots are all inf).  ``kernel`` forces the
+    ``"dense"`` einsum or ``"sparse"`` padded-support formulation; by
+    default the crossover picks dense for n <= ``_TWOHOP_DENSE_MAX_N``.
+    The sparse kernel scans a per-period-residue circuit-support LUT built
+    by the same :class:`_SupportPlans` merge the NumPy engine uses.
+    """
+    for m in modes:
+        if m not in ("rotorlb", "vlb"):
+            raise ValueError(f"not a two-hop mode: {m}")
+    fns = _jax_fns()
+    B = len(cases)
+    n = cases[0][1].n
+    caps_list, caps_flat, cap_idx, apos, asz, live, H = _jax_batch_inputs(
+        cases, bits_per_slot)
+    direct = np.array([0.0 if m == "vlb" else 1.0 for m in modes],
+                      dtype=np.float32).reshape(B, 1, 1)
+    if kernel is None:
+        kernel = "dense" if n <= _TWOHOP_DENSE_MAX_N else "sparse"
+    if kernel == "dense":
+        delivered, second = fns["twohop_dense"](
+            caps_flat, cap_idx, apos, asz, live, direct)
+    elif kernel == "sparse":
+        plans = _SupportPlans(caps_list, n, list(range(B)), B)
+        keys: dict[tuple, int] = {}
+        plan_idx = np.zeros(apos.shape[0], dtype=np.int32)
+        plan_list: list[dict] = []
+        for slot in range(H):
+            key = plans.key(slot)
+            pi = keys.get(key)
+            if pi is None:
+                pi = keys[key] = len(plan_list)
+                plan_list.append(plans.plan(slot))
+            plan_idx[slot] = pi
+        J = _pad_to(max((p["J"] for p in plan_list), default=0), _PAD_J)
+        # pad the plan count to a power-of-two bucket: coprime period
+        # mixes multiply distinct residue tuples toward lcm(periods), and
+        # an unpadded P would make every mix a fresh jit signature (the
+        # LUT itself stays bounded by H — at most one plan per slot)
+        P = 1 << (max(len(plan_list), 1) - 1).bit_length()
+        p_row = np.zeros((P, J), dtype=np.int32)
+        p_v = np.zeros((P, J), dtype=np.int32)
+        p_b = np.zeros((P, J), dtype=np.int32)
+        p_valid = np.zeros((P, J), dtype=bool)
+        for i, p in enumerate(plan_list):
+            j = p["J"]
+            p_row[i, :j] = p["row"]
+            p_v[i, :j] = p["v"]
+            p_b[i, :j] = p["b"]
+            p_valid[i, :j] = True
+        delivered, second = fns["twohop_sparse"](
+            caps_flat, cap_idx, apos, asz, live, plan_idx,
+            p_row, p_v, p_b, p_valid, direct)
+    else:
+        raise ValueError(kernel)
+    return _jax_results(cases, delivered, second, bits_per_slot, modes)
 
 
 def simulate_aggregate_jax(

@@ -221,3 +221,52 @@ def test_construction_charging_measured_mode_runs():
     assert starved.stale_slots == wl.horizon - 100      # never activates
     assert (generous.result.utilization
             >= starved.result.utilization - 1e-12)
+
+
+def test_reconfig_penalty_zero_is_exact_no_penalty():
+    """Acceptance: the default reconfig_penalty_slots=0 keeps dynamics
+    bit-identical (FCT-for-FCT) to the uncharged loop."""
+    wl = _shifting()
+    common = dict(wl=wl, epoch_slots=100, policy="adaptive", d_hat=2,
+                  recfg_frac=RECFG, alpha=0.5)
+    default, explicit = run_adaptive([
+        AdaptiveCase(label="default", **common),
+        AdaptiveCase(reconfig_penalty_slots=0, label="explicit", **common),
+    ], BPS)
+    assert np.array_equal(default.result.fct_slots,
+                          explicit.result.fct_slots)
+    assert default.result.delivered_bits == explicit.result.delivered_bits
+    assert default.dark_slots == explicit.dark_slots == 0
+
+
+def test_reconfig_penalty_darkens_each_hot_swap():
+    """Each hot-swap costs the penalty window of dark capacity: the
+    accounting is exact and throughput can only suffer."""
+    wl = _shifting()
+    common = dict(wl=wl, epoch_slots=100, policy="adaptive", d_hat=2,
+                  recfg_frac=RECFG, alpha=0.5)
+    free, charged = run_adaptive([
+        AdaptiveCase(label="free", **common),
+        AdaptiveCase(reconfig_penalty_slots=15, label="charged", **common),
+    ], BPS)
+    assert charged.recomputes == free.recomputes > 0
+    assert charged.dark_slots == 15 * charged.recomputes
+    assert charged.result.utilization <= free.result.utilization + 1e-12
+    assert charged.result.delivered_bits <= charged.result.offered_bits + 1e-6
+    with pytest.raises(ValueError):
+        run_adaptive([AdaptiveCase(wl, 100, reconfig_penalty_slots=-1)], BPS)
+
+
+def test_reconfig_penalty_epoch_length_tradeoff():
+    """With a dark window charged per swap, recomputing every epoch loses
+    more capacity the shorter the epoch is: the dark accounting scales
+    inversely with epoch length on the same workload."""
+    wl = _shifting()
+    rows = run_adaptive([
+        AdaptiveCase(wl=wl, epoch_slots=E, policy="adaptive", d_hat=2,
+                     recfg_frac=RECFG, alpha=0.5,
+                     reconfig_penalty_slots=50, label=f"E{E}")
+        for E in (100, 500)
+    ], BPS)
+    short, long_ = rows
+    assert short.dark_slots > long_.dark_slots

@@ -93,6 +93,7 @@ def test_vermilion_beats_oblivious_singlehop_util():
 
 
 def test_jax_parity():
+    pytest.importorskip("jax")
     wl = websearch_workload(6, 0.3, 300, BPS, d_hat=2, seed=2)
     s = vermilion_schedule(wl.demand_matrix(), k=3, d_hat=2, recfg_frac=RECFG)
     r_np = simulate(s, wl, BPS)
@@ -161,6 +162,7 @@ def test_run_sweep_matches_per_case_simulate():
 
 def test_run_sweep_jax_backend_aggregates():
     """backend='jax' reproduces the numpy aggregate (no FCTs tracked)."""
+    pytest.importorskip("jax")
     wl = websearch_workload(6, 0.3, 200, BPS, d_hat=2, seed=2)
     s = vermilion_schedule(wl.demand_matrix(), k=3, d_hat=2,
                            recfg_frac=RECFG)
@@ -169,6 +171,96 @@ def test_run_sweep_jax_backend_aggregates():
     r_jx = run_sweep(cases, BPS, backend="jax")[0].result
     assert np.isclose(r_np.delivered_bits, r_jx.delivered_bits, rtol=1e-5)
     assert not np.isfinite(r_jx.fct_slots).any()
+
+
+# ---------------------------------------------------------------------------
+# Two-hop JAX backend: parity with the NumPy relay engine (which is itself
+# golden-traced to simulate_reference, so these pins are transitive)
+# ---------------------------------------------------------------------------
+
+def _assert_jax_parity(r_np, r_jx, rtol=1e-3):
+    assert np.isclose(r_np.utilization, r_jx.utilization, rtol=rtol)
+    assert np.isclose(r_np.delivered_bits, r_jx.delivered_bits, rtol=rtol)
+    assert np.isclose(r_np.avg_hops, r_jx.avg_hops, rtol=rtol)
+    assert not np.isfinite(r_jx.fct_slots).any()
+
+
+@pytest.mark.parametrize("mode", ["rotorlb", "vlb"])
+@pytest.mark.parametrize("kernel", ["dense", "sparse"])
+def test_twohop_jax_parity(mode, kernel):
+    """Both kernel formulations match the NumPy engine for both modes."""
+    pytest.importorskip("jax")
+    from repro.core.simulator import _twohop_batch_jax
+    wl = websearch_workload(10, 0.45, 300, BPS, d_hat=2, seed=1)
+    s = oblivious_schedule(10, d_hat=2, recfg_frac=RECFG)
+    r_np = simulate(s, wl, BPS, mode=mode)
+    r_jx = _twohop_batch_jax([(s, wl)], BPS, [mode], kernel=kernel)[0]
+    _assert_jax_parity(r_np, r_jx)
+
+
+def test_twohop_jax_mixed_mode_grid():
+    """One jax sweep over rotorlb + vlb + single_hop matches numpy rows."""
+    pytest.importorskip("jax")
+    wl = websearch_workload(8, 0.4, 250, BPS, d_hat=2, seed=5)
+    sv = vermilion_schedule(wl.demand_matrix(), k=3, d_hat=2,
+                            recfg_frac=RECFG)
+    so = oblivious_schedule(8, d_hat=2, recfg_frac=RECFG)
+    cases = [SweepCase(sv, wl, "single_hop", "v"),
+             SweepCase(so, wl, "rotorlb", "r"),
+             SweepCase(so, wl, "vlb", "l")]
+    rows_np = run_sweep(cases, BPS)
+    rows_jx = run_sweep(cases, BPS, backend="jax")
+    assert [r.label for r in rows_jx] == ["v", "r", "l"]
+    for a, b in zip(rows_np, rows_jx):
+        _assert_jax_parity(a.result, b.result)
+    assert rows_jx[2].result.avg_hops >= rows_jx[1].result.avg_hops >= 1.0
+
+
+def test_twohop_jax_overloaded():
+    """Deep queues: the offload/drain bookkeeping under sustained backlog."""
+    pytest.importorskip("jax")
+    wl = websearch_workload(6, 2.5, 400, BPS, d_hat=1, seed=0)
+    s = oblivious_schedule(6, d_hat=1, recfg_frac=RECFG)
+    for mode in ("rotorlb", "vlb"):
+        r_np = simulate(s, wl, BPS, mode=mode)
+        r_jx = run_sweep([SweepCase(s, wl, mode, mode)], BPS,
+                         backend="jax")[0].result
+        _assert_jax_parity(r_np, r_jx)
+
+
+def test_twohop_jax_mixed_horizons():
+    """Cases with different wl.horizon batch correctly (finished cases
+    idle while the batch runs on)."""
+    pytest.importorskip("jax")
+    s = oblivious_schedule(8, d_hat=2, recfg_frac=RECFG)
+    wl_a = websearch_workload(8, 0.5, 120, BPS, d_hat=2, seed=2)
+    wl_b = websearch_workload(8, 0.5, 300, BPS, d_hat=2, seed=3)
+    cases = [SweepCase(s, wl_a, "rotorlb", "short"),
+             SweepCase(s, wl_b, "vlb", "long")]
+    rows_np = run_sweep(cases, BPS)
+    rows_jx = run_sweep(cases, BPS, backend="jax")
+    for a, b in zip(rows_np, rows_jx):
+        _assert_jax_parity(a.result, b.result)
+
+
+def test_jax_backend_no_retrace():
+    """Repeated same-shape sweeps reuse the compiled kernels: the scan
+    bodies must not re-trace (the PR 3 aggregate engine re-traced every
+    call)."""
+    pytest.importorskip("jax")
+    from repro.core.simulator import _JAX_TRACES
+    wl = websearch_workload(7, 0.4, 150, BPS, d_hat=2, seed=4)
+    sv = vermilion_schedule(wl.demand_matrix(), k=3, d_hat=2,
+                            recfg_frac=RECFG)
+    so = oblivious_schedule(7, d_hat=2, recfg_frac=RECFG)
+    cases = [SweepCase(sv, wl, "single_hop", "v"),
+             SweepCase(so, wl, "rotorlb", "r"),
+             SweepCase(so, wl, "vlb", "l")]
+    run_sweep(cases, BPS, backend="jax")          # compile (or cache hit)
+    before = dict(_JAX_TRACES)
+    for _ in range(3):
+        run_sweep(cases, BPS, backend="jax")
+    assert _JAX_TRACES == before, (before, _JAX_TRACES)
 
 
 def test_completed_frac_monotone_in_capacity():
