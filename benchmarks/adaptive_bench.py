@@ -15,6 +15,11 @@ Compares four control policies on one phase-shifting websearch workload
 Prints the repo's ``name,us_per_call,derived`` CSV plus a ``# summary``
 block checking the headline claims: adaptive beats oblivious, tracks the
 oracle's utilization, and the stale schedule degrades after a shift.
+
+``run_disagreement()`` sweeps gather staleness -> per-node schedule
+disagreement -> utilization (every ToR schedules from its own partial
+view; output-port collisions resolved per ``AdaptiveCase.collision``),
+and ``--smoke`` runs its smallest grid as a CI guard.
 """
 from __future__ import annotations
 
@@ -113,6 +118,37 @@ def run_charging(n: int = 32, d_hat: int = 2, load: float = 0.5,
     ], BITS_PER_SLOT)
 
 
+def run_disagreement(n: int = 16, d_hat: int = 4, load: float = 0.5,
+                     horizon: int = 6000, shift_period: int = 2000,
+                     epoch_slots: int = 250, seed: int = 1,
+                     steps_grid: tuple[int, ...] | None = None,
+                     collisions: tuple[str, ...] = ("drop", "lowest",
+                                                    "receiver"),
+                     ) -> list[AdaptiveRow]:
+    """Gather staleness -> schedule disagreement -> utilization.
+
+    Every ToR computes the next schedule from its own (possibly partial)
+    ring-gather view, so fewer gather steps mean more disagreeing
+    schedules, more contested output ports, and more capacity lost to
+    collisions — swept here on the phase-shifting train for each
+    data-plane resolution mode (see ``AdaptiveCase.collision``).  A
+    complete gather (``steps = n - 1``) is the consistent-fabric baseline:
+    zero disagreement, zero collision loss, identical across modes."""
+    if steps_grid is None:
+        steps_grid = (n - 1, n // 2, n // 4, 2)
+    wl = phase_shifting_workload(
+        n, load, horizon, BITS_PER_SLOT, d_hat=d_hat, seed=seed,
+        phases=PHASES, shift_period=shift_period)
+    cases = [
+        AdaptiveCase(wl=wl, epoch_slots=epoch_slots, policy="adaptive",
+                     d_hat=d_hat, recfg_frac=RECFG, seed=seed, alpha=0.5,
+                     gather_steps=s, collision=c, label=f"steps{s}-{c}",
+                     meta={"gather_steps": s, "collision": c})
+        for c in collisions for s in steps_grid
+    ]
+    return run_adaptive(cases, BITS_PER_SLOT)
+
+
 def run_epoch_tradeoff(n: int = 16, d_hat: int = 4, load: float = 0.5,
                        horizon: int = 6000, shift_period: int = 2000,
                        epoch_grid: tuple[int, ...] = (100, 250, 500, 1000),
@@ -137,6 +173,44 @@ def run_epoch_tradeoff(n: int = 16, d_hat: int = 4, load: float = 0.5,
     return run_adaptive(cases, BITS_PER_SLOT)
 
 
+def _print_disagreement(rows: list[AdaptiveRow]) -> None:
+    by_steps: dict[int, AdaptiveRow] = {}
+    for row in rows:
+        r = row.result
+        print(f"adaptive_disagree[{row.label}],{row.sim_s * 1e6:.0f},"
+              f"util={r.utilization:.3f};"
+              f"disagree={np.mean(row.epoch_disagreement):.3f};"
+              f"coll_loss={np.mean(row.epoch_collision_loss):.3f};"
+              f"groups={row.schedule_groups_max};"
+              f"recomputes={row.recomputes}")
+        s = row.meta["gather_steps"]
+        if row.meta["collision"] == "drop":
+            by_steps[s] = row
+    trail = ", ".join(
+        f"steps={s} -> dis {np.mean(by_steps[s].epoch_disagreement):.2f} "
+        f"util {by_steps[s].result.utilization:.3f}"
+        for s in sorted(by_steps, reverse=True))
+    print(f"# staleness -> disagreement -> utilization (drop): {trail}")
+
+
+def smoke(n: int = 8) -> list[AdaptiveRow]:
+    """Smallest-grid disagreement sweep for CI: exercises the per-node
+    control plane, both extreme staleness points, and two collision modes
+    in a few seconds, so the benchmark entry points cannot rot."""
+    rows = run_disagreement(
+        n=n, d_hat=2, load=0.4, horizon=600, shift_period=300,
+        epoch_slots=150, steps_grid=(n - 1, 2),
+        collisions=("drop", "lowest"))
+    _print_disagreement(rows)
+    full = [r for r in rows if r.meta["gather_steps"] == n - 1]
+    partial = [r for r in rows if r.meta["gather_steps"] == 2]
+    assert all(np.all(r.epoch_disagreement == 0.0) for r in full)
+    assert all(r.collision_lost_bits > 0 for r in partial)
+    print("# smoke: ok (consistent baseline clean, partial gather "
+          "disagrees and loses capacity)")
+    return rows
+
+
 def main(argv: list[str] | None = None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--n", type=int, default=16)
@@ -146,7 +220,13 @@ def main(argv: list[str] | None = None):
     ap.add_argument("--shift-period", type=int, default=1000)
     ap.add_argument("--epoch-slots", type=int, default=150)
     ap.add_argument("--seed", type=int, default=1)
+    ap.add_argument("--smoke", action="store_true",
+                    help="run the smallest disagreement grid and exit")
     args = ap.parse_args(argv)
+
+    if args.smoke:
+        smoke()
+        return None
 
     rows = run(args.n, args.d_hat, args.load, args.horizon,
                args.shift_period, args.epoch_slots, args.seed)
@@ -208,7 +288,10 @@ def main(argv: list[str] | None = None):
           + ", ".join(f"dark={p} -> E{best_by_p[p].meta['epoch_slots']} "
                       f"(util {best_by_p[p].result.utilization:.3f})"
                       for p in sorted(best_by_p)))
-    return rows, charged, tradeoff
+
+    disagree = run_disagreement()
+    _print_disagreement(disagree)
+    return rows, charged, tradeoff, disagree
 
 
 if __name__ == "__main__":

@@ -13,8 +13,9 @@ Persists the perf trajectory for cross-PR tracking:
   - results/BENCH_schedule.json — construction latency per method per n
     (per-stage breakdown + hk/euler end-to-end speedup)
   - results/BENCH_adaptive.json — closed-loop utilization, with and
-    without construction charging, plus the epoch-length x
-    reconfiguration-penalty tradeoff grid
+    without construction charging, the epoch-length x
+    reconfiguration-penalty tradeoff grid, and the gather-staleness ->
+    schedule-disagreement -> utilization sweep
   - results/BENCH_twohop.json — two-hop relay engine wall-clock per
     (n, mode, backend), numpy vs jax (min-of-N)
 """
@@ -38,6 +39,10 @@ def _adaptive_row_json(row) -> dict:
         "stale_slots": row.stale_slots,
         "dark_slots": row.dark_slots,
         "construction_s": row.construction_s,
+        "mean_disagreement": float(row.epoch_disagreement.mean()),
+        "mean_collision_loss": float(row.epoch_collision_loss.mean()),
+        "collision_lost_bits": row.collision_lost_bits,
+        "schedule_groups_max": row.schedule_groups_max,
         "sim_s": row.sim_s,
         "meta": row.meta,
     }
@@ -60,7 +65,8 @@ def main() -> None:
     fct_bench.main([])
     sys.stdout.flush()
 
-    adaptive_rows, charged_rows, tradeoff_rows = adaptive_bench.main([])
+    (adaptive_rows, charged_rows, tradeoff_rows,
+     disagreement_rows) = adaptive_bench.main([])
     sys.stdout.flush()
 
     twohop_rows = fct_bench.twohop_table()
@@ -78,6 +84,7 @@ def main() -> None:
         "sweep": [_adaptive_row_json(r) for r in adaptive_rows],
         "charged": [_adaptive_row_json(r) for r in charged_rows],
         "epoch_tradeoff": [_adaptive_row_json(r) for r in tradeoff_rows],
+        "disagreement": [_adaptive_row_json(r) for r in disagreement_rows],
     }, indent=2) + "\n")
     (RESULTS / "BENCH_twohop.json").write_text(
         json.dumps(twohop_rows, indent=2) + "\n")

@@ -86,6 +86,24 @@ def main():
               f"(pre-shift {u[:5].mean():.3f}, post-shift {u[5:].mean():.3f})"
               f" recomputes={row.recomputes}")
 
+    print("=== 5. Per-node schedule disagreement (partial gather) ===")
+    # if the ring AllGather is cut short, every ToR assembles a different
+    # partial matrix and swaps to the schedule of ITS OWN view — circuits
+    # stop forming global matchings, and contested output ports cost real
+    # capacity.  Sweep the gather staleness and watch disagreement and
+    # collision loss rise (collision="drop" is the pessimistic fabric;
+    # "lowest"/"receiver" arbitrate one winner per contested port).
+    for steps in (n - 1, n // 4):
+        rd = run_adaptive(
+            [AdaptiveCase(wp, 200, "adaptive", d_hat=d_hat,
+                          recfg_frac=recfg, alpha=0.5, gather_steps=steps,
+                          collision="drop", label=f"steps={steps}")],
+            bits_per_slot)[0]
+        print(f"  gather steps={steps:2d}: util={rd.result.utilization:.3f} "
+              f"disagreement={np.mean(rd.epoch_disagreement):.3f} "
+              f"collision_loss={np.mean(rd.epoch_collision_loss):.3f} "
+              f"distinct schedules={rd.schedule_groups_max}")
+
 
 if __name__ == "__main__":
     main()

@@ -28,6 +28,9 @@ from .schedule import (
     Schedule,
     vermilion_schedule,
     vermilion_emulated_topology,
+    per_node_schedules,
+    effective_perms,
+    schedule_disagreement,
     oblivious_schedule,
     greedy_matching_schedule,
     bvn_schedule,
@@ -58,12 +61,16 @@ from .simulator import (
     simulate_aggregate_jax,
 )
 from .estimation import (
+    RingViews,
     TrafficEstimator,
     allgather_rows,
     dequantize,
+    estimate_all_views,
     estimate_global_matrix,
     quantize_row,
+    ring_all_views,
     ring_leader_view,
+    ring_view_mask,
 )
 from .collectives import (
     ring_allreduce_traffic,

@@ -9,6 +9,13 @@ path.
 
 Quantization follows A1: each entry is scaled by (k-1)/k * 1/(c*Delta),
 floored, and clipped to 16 bits (65535), supporting up to n = 21845 ToRs.
+
+Under a *partial* gather (fewer than n-1 exchange slots ran) the per-node
+views differ: node j holds exactly the rows i with (j - i) mod n <= steps.
+:func:`ring_all_views` / :func:`estimate_all_views` expose all n views in
+O(n^2) via that banded mask (see :class:`RingViews`); downstream,
+``repro.core.schedule.per_node_schedules`` turns them into each node's own
+next schedule and the simulator resolves the resulting disagreement.
 """
 from __future__ import annotations
 
@@ -17,19 +24,42 @@ from dataclasses import dataclass, field
 import numpy as np
 
 __all__ = [
+    "RingViews",
     "TrafficEstimator",
     "allgather_rows",
     "dequantize",
+    "estimate_all_views",
     "estimate_global_matrix",
     "quantize_row",
+    "ring_all_views",
     "ring_leader_view",
+    "ring_view_mask",
 ]
+
+
+def _check_steps(n: int, steps: int | None) -> int:
+    # every node holds its own row from slot 0 on; negative step counts
+    # have no physical reading (and would silently zero even the diagonal
+    # out of the closed-form band masks)
+    steps = n - 1 if steps is None else steps
+    if steps < 0:
+        raise ValueError(f"steps must be >= 0 (got {steps})")
+    return steps
+
+
+def _check_k(k: int) -> None:
+    # k = 1 makes the (k-1)/k scale exactly 0: quantize_row would return
+    # silent all-zeros and dequantize would divide by zero (inf ticks)
+    if k < 2:
+        raise ValueError(f"k must be >= 2 (got {k}): the quantizer scale "
+                         "(k-1)/k degenerates at k = 1")
 
 
 def quantize_row(
     row: np.ndarray, k: int, bits_per_slot: float
 ) -> np.ndarray:
     """A1's two-step transform: normalize then floor; 16-bit saturating."""
+    _check_k(k)
     scaled = row * ((k - 1) / k) / bits_per_slot
     return np.clip(np.floor(scaled), 0, 65535).astype(np.uint16)
 
@@ -42,24 +72,89 @@ def allgather_rows(local_rows: np.ndarray, steps: int | None = None) -> np.ndarr
     exchange of Figure 9.  Returns the (n, n, n) per-node views; view[i] is
     the matrix node i has assembled.  With ``steps < n-1`` the gather is
     partial (models mid-phase failure); missing rows are zero.
+
+    This is the simulated reference for the exchange model; the closed
+    forms (:func:`ring_view_mask` / :func:`ring_all_views`) are pinned
+    equal to it in tests/test_estimation.py and serve the adaptive loop.
     """
     n = local_rows.shape[0]
-    steps = n - 1 if steps is None else steps
+    steps = _check_steps(n, steps)
     views = np.zeros((n, n, local_rows.shape[1]), dtype=local_rows.dtype)
-    for i in range(n):
-        views[i, i] = local_rows[i]
+    views[np.arange(n), np.arange(n)] = local_rows
     # slot t: node i forwards everything it has to neighbor (i+1) mod n;
-    # after n-1 slots all views are complete (linear pipeline).
+    # after n-1 slots all views are complete (linear pipeline).  One step
+    # is a simultaneous shift of ownership down the ring: node j gains
+    # exactly the rows its predecessor held that it lacked.
     have = np.eye(n, dtype=bool)
     for _ in range(steps):
-        new_have = have.copy()
-        for i in range(n):
-            j = (i + 1) % n
-            gained = have[i] & ~have[j]
-            views[j, gained] = views[i, gained]
-            new_have[j] |= have[i]
-        have = new_have
+        prev_have = np.roll(have, 1, axis=0)        # what (j-1) mod n held
+        gained = prev_have & ~have                  # (n, n) rows node j gains
+        j_idx, i_idx = np.nonzero(gained)
+        views[j_idx, i_idx] = views[(j_idx - 1) % n, i_idx]
+        have |= prev_have
     return views
+
+
+def ring_view_mask(n: int, steps: int | None = None) -> np.ndarray:
+    """Closed-form ownership mask of the ring AllGather after ``steps``
+    slots: ``have[j, i]`` is True iff node j holds row i, i.e. iff
+    ``(j - i) mod n <= steps`` (the forward-ring pipeline delivers row i
+    to node j after exactly ``(j - i) mod n`` slots).  This banded (n, n)
+    mask is the whole exchange state — every per-node view is a masked
+    copy of the same row matrix, so all n views cost O(n^2), never an
+    (n, n, n) tensor.
+    """
+    steps = _check_steps(n, steps)
+    idx = np.arange(n)
+    return ((idx[:, None] - idx[None, :]) % n) <= steps
+
+
+@dataclass(frozen=True)
+class RingViews:
+    """All n per-node views of a (possibly partial) ring AllGather, in
+    O(n^2) storage: node j's assembled matrix is ``rows`` with the rows it
+    has not yet received zeroed (``view(j)``).
+
+    ``unique()`` deduplicates *identical* views: two nodes see the same
+    matrix iff they hold the same set of rows with nonzero content (rows
+    missing from a view are zero-filled, so all-zero rows never
+    distinguish views).  With a complete gather every node's view is the
+    full matrix and all n collapse into one group — which is what keeps
+    the consistent-fabric fast path of the adaptive loop exact.
+    """
+
+    rows: np.ndarray        # (n, r) per-node rows (any dtype / units)
+    have: np.ndarray        # (n, n) bool; have[j, i]: node j holds row i
+
+    @property
+    def n(self) -> int:
+        return int(self.rows.shape[0])
+
+    def view(self, j: int) -> np.ndarray:
+        """Node j's assembled matrix (missing rows zero)."""
+        return np.where(self.have[j][:, None], self.rows, 0)
+
+    def unique(self) -> tuple[np.ndarray, np.ndarray]:
+        """(masks, owner): ``masks`` (g, n) bool are the distinct effective
+        row sets, ``owner[j]`` the group of node j.  Group g's view is
+        ``rows * masks[g][:, None]``."""
+        eff = self.have & self.rows.astype(bool).any(axis=1)[None, :]
+        masks, owner = np.unique(eff, axis=0, return_inverse=True)
+        return masks, owner.reshape(-1)
+
+
+def ring_all_views(
+    local_rows: np.ndarray, steps: int | None = None
+) -> RingViews:
+    """Closed form of *every* node's view after ``steps`` ring-AllGather
+    slots, generalizing :func:`ring_leader_view` from one leader to the
+    whole fabric.  The banded mask ``(j - i) mod n <= steps`` gives all n
+    views in O(n^2) storage (see :class:`RingViews`) — no (n, n, n)
+    exchange tensor.  Pinned equal to the simulated
+    :func:`allgather_rows` in tests/test_estimation.py.
+    """
+    return RingViews(rows=local_rows,
+                     have=ring_view_mask(local_rows.shape[0], steps))
 
 
 def ring_leader_view(
@@ -72,11 +167,10 @@ def ring_leader_view(
     assembled matrix needs no simulation of the other n-1 views: O(n^2)
     instead of the (n, n, n) exchange tensor.  Equal to
     ``allgather_rows(local_rows, steps)[leader]`` (cross-validated in
-    tests/test_estimation.py) — this is what keeps the adaptive loop's
-    per-epoch estimation cost off the O(n^3) path at large n.
+    tests/test_estimation.py).  One row of :func:`ring_all_views`.
     """
     n = local_rows.shape[0]
-    steps = n - 1 if steps is None else steps
+    steps = _check_steps(n, steps)
     have = ((leader - np.arange(n)) % n) <= steps
     out = np.zeros_like(local_rows)
     out[have] = local_rows[have]
@@ -85,7 +179,14 @@ def ring_leader_view(
 
 @dataclass
 class TrafficEstimator:
-    """Per-node EWMA of VOQ byte counters (A2/A4)."""
+    """Per-node EWMA of VOQ byte counters (A2/A4).
+
+    One instance tracks one node's outgoing row by default;
+    :meth:`fleet` builds a batched instance whose ``ewma`` is the whole
+    (n, n) matrix — row i is node i's estimator — so one :meth:`update`
+    folds every node's counters in a single vector op (float-identical to
+    n per-node instances updated one by one).
+    """
 
     n: int
     alpha: float = 0.3                      # EWMA weight of the newest period
@@ -95,8 +196,18 @@ class TrafficEstimator:
         if self.ewma is None:
             self.ewma = np.zeros((self.n,), dtype=np.float64)
 
+    @classmethod
+    def fleet(cls, n: int, alpha: float = 0.3) -> "TrafficEstimator":
+        """All n per-node estimators as one batched instance
+        (``ewma.shape == (n, n)``; row i is node i's EWMA)."""
+        return cls(n=n, alpha=alpha, ewma=np.zeros((n, n), dtype=np.float64))
+
     def update(self, period_bits: np.ndarray) -> np.ndarray:
-        """Fold one period's VOQ counters into the EWMA and reset counters."""
+        """Fold one period's VOQ counters into the EWMA and return it.
+
+        ``period_bits`` is read only — the caller owns (and resets) its
+        counters; this method never mutates its input.
+        """
         self.ewma = (1 - self.alpha) * self.ewma + self.alpha * period_bits
         return self.ewma
 
@@ -104,6 +215,7 @@ class TrafficEstimator:
 def dequantize(q: np.ndarray, k: int, bits_per_slot: float) -> np.ndarray:
     """Invert :func:`quantize_row`'s scaling (up to the floor): quantized
     counts are in units of ``bits_per_slot * k/(k-1)`` bits."""
+    _check_k(k)
     return q.astype(np.float64) * (bits_per_slot * k / (k - 1))
 
 
@@ -136,3 +248,40 @@ def estimate_global_matrix(
     ])
     view = ring_leader_view(rows, steps=steps, leader=leader)
     return dequantize(view, k, bits_per_slot)
+
+
+def estimate_all_views(
+    per_node_period_bits: np.ndarray,
+    estimator: TrafficEstimator,
+    k: int,
+    bits_per_slot: float,
+    steps: int | None = None,
+) -> RingViews:
+    """Batched estimation round yielding *every* node's dequantized view.
+
+    The per-node pipeline of :func:`estimate_global_matrix` (EWMA update,
+    quantize, AllGather, dequantize), run for the whole fabric at once:
+    ``estimator`` is a fleet instance (:meth:`TrafficEstimator.fleet`)
+    whose one vectorized update replaces the n per-node updates
+    float-for-float, quantization and dequantization act on all n rows in
+    one shot, and the (possibly partial) gather is the closed-form banded
+    mask of :func:`ring_all_views` — all n views in O(n^2).
+
+    Returns a :class:`RingViews` whose ``rows`` are already dequantized to
+    the input's units; node j's matrix is ``.view(j)`` and
+    ``.unique()`` groups nodes with identical views (a complete gather
+    collapses to one group, reproducing the single-leader estimate
+    exactly).  Missing rows are zero at the holding node — zero quantized
+    ticks dequantize to zero, so masking before or after dequantization is
+    equivalent.
+    """
+    if estimator.ewma.shape != per_node_period_bits.shape:
+        raise ValueError(
+            f"need a fleet estimator of shape {per_node_period_bits.shape} "
+            f"(got ewma shape {estimator.ewma.shape}); build one with "
+            "TrafficEstimator.fleet(n)")
+    rows = quantize_row(estimator.update(per_node_period_bits), k,
+                        bits_per_slot)
+    views = ring_all_views(rows, steps=steps)
+    return RingViews(rows=dequantize(views.rows, k, bits_per_slot),
+                     have=views.have)

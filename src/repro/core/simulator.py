@@ -70,8 +70,17 @@ through one slot loop with a leading batch axis:
    epochs, per-node VOQ byte counters harvested at each boundary feed the
    Appendix-A pipeline (EWMA → quantize → ring-AllGather → dequantize),
    and the recomputed ``vermilion_schedule`` is hot-swapped without
-   resetting VOQ or flow state.  Construction is optionally charged for
-   real (``AdaptiveCase.construction_slots``): the new schedule only
+   resetting VOQ or flow state.  The control plane is *per node*: every
+   ToR computes the next schedule from its own assembled matrix
+   (``estimate_all_views`` + ``per_node_schedules``; identical views are
+   built once, so a complete gather keeps the fabric consistent), and
+   under a partial gather (``gather_steps < n - 1``) the merged port
+   configuration is generally not a matching — ``_fabric_plan`` resolves
+   output-port collisions (drop / lowest-index-wins / rotating receiver
+   arbitration) and charges the contended capacity, with per-epoch
+   disagreement and collision-loss accounting on :class:`AdaptiveRow`.
+   Construction is optionally charged for real
+   (``AdaptiveCase.construction_slots``): the new schedule only
    activates after the slots its construction consumed, with the stale
    schedule serving in the interim.  :func:`phase_shifting_workload`
    generates the non-stationary (phase-train) traffic that exercises it.
@@ -88,8 +97,14 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from .estimation import TrafficEstimator, estimate_global_matrix
-from .schedule import Schedule, oblivious_schedule, vermilion_schedule
+from .estimation import TrafficEstimator, estimate_all_views
+from .schedule import (
+    Schedule,
+    effective_perms,
+    oblivious_schedule,
+    per_node_schedules,
+    vermilion_schedule,
+)
 from .traffic import phase_train
 
 __all__ = [
@@ -1017,6 +1032,118 @@ def run_sweep(
 # ---------------------------------------------------------------------------
 
 _POLICIES = ("adaptive", "oracle", "stale", "oblivious")
+_COLLISIONS = ("drop", "lowest", "receiver")
+
+
+@dataclass(frozen=True)
+class _FabricPlan:
+    """The fabric's merged per-slot circuit plan when every input port
+    follows its own node's schedule, with output-port collisions already
+    resolved.  ``plans[s]`` is the period-slot-s ``(pair_id, capacity)``
+    support the per-slot engine consumes; ``lost[s]`` the capacity (bits)
+    that slot loses to contention; ``disagreement`` the contested fraction
+    of (matching, port) claims (see ``schedule_disagreement``).  A
+    consistent fabric (one schedule) has zero loss and zero disagreement
+    and its plans are byte-identical to ``Schedule.slot_circuits``."""
+
+    plans: list
+    n_slots: int
+    disagreement: float
+    lost: np.ndarray
+    groups: int
+
+
+def _fabric_plan(
+    scheds: list[Schedule],
+    owner: np.ndarray,
+    bits_per_slot: float,
+    collision: str,
+) -> _FabricPlan:
+    """Merge per-node schedules into the fabric's effective circuit plan.
+
+    With one schedule (all nodes agree) this is exactly the consistent
+    plan of ``Schedule.slot_circuits`` — the historical single-leader
+    path, preserved bit-for-bit.  With several, each input port i is
+    configured by *its own* node's matching row, so a merged row is
+    generally not a permutation: two or more inputs can claim the same
+    output port of the same plane.  ``collision`` picks the data-plane
+    resolution:
+
+      * ``"drop"``     — every contested claim is lost (an optical
+        receiver locked by two carriers recovers neither); the
+        pessimistic, arbitration-free fabric.
+      * ``"lowest"``   — the lowest-index input wins the port (a fixed-
+        priority electrical arbiter); deterministic but unfair.
+      * ``"receiver"`` — receiver-plane arbitration with rotating
+        priority: matching t's port grants the contender whose index is
+        next at/after ``t mod n``, spreading wins evenly over a period.
+
+    Self-loop claims (the configuration model allows them) contend for
+    the output port like any other claim but never carry traffic —
+    matching the consistent path, where self-loops are dropped from the
+    circuit support.  Lost capacity counts only claims that would have
+    carried traffic (src != dst) had the port not been contested.
+    """
+    if collision not in _COLLISIONS:
+        raise ValueError(f"collision must be one of {_COLLISIONS} "
+                         f"(got {collision!r})")
+    if len(scheds) == 1:
+        sched = scheds[0]
+        n = sched.n
+        plans = [(at * n + v, cap)
+                 for at, v, cap in sched.slot_circuits(bits_per_slot)]
+        return _FabricPlan(plans=plans, n_slots=sched.n_slots,
+                           disagreement=0.0,
+                           lost=np.zeros(sched.n_slots), groups=1)
+
+    base = scheds[0]
+    n, T, d_hat, n_slots = base.n, base.T, base.d_hat, base.n_slots
+    for s in scheds[1:]:
+        # effective_perms (below) checks the (T, n, d_hat) footprint;
+        # capacity pricing additionally needs one reconfiguration fraction
+        if s.recfg_frac != base.recfg_frac:
+            raise ValueError(
+                "per-node schedules must share recfg_frac to be merged: "
+                f"{s.recfg_frac} != {base.recfg_frac}")
+    eff = effective_perms(scheds, owner)                 # (T, n)
+    w = bits_per_slot * (1.0 - base.recfg_frac)
+    src = np.arange(n)
+    kf = (np.arange(T)[:, None] * n + eff).reshape(-1)   # claim key (t, v)
+    claims = np.bincount(kf, minlength=T * n)
+    contested = (claims[kf] > 1).reshape(T, n)
+
+    if collision == "drop":
+        win = ~contested
+    else:
+        if collision == "lowest":
+            order = np.argsort(kf, kind="stable")        # src asc per claim
+        else:  # receiver: rotating priority (t mod n) over source index
+            prio = (src[None, :] - np.arange(T)[:, None] % n) % n
+            order = np.lexsort((prio.reshape(-1), kf))
+        ks = kf[order]
+        first = np.r_[True, ks[1:] != ks[:-1]]
+        win = np.zeros(T * n, dtype=bool)
+        win[order[first]] = True
+        win = win.reshape(T, n)
+
+    nonself = eff != src[None, :]
+    live = win & nonself
+    slot_of = np.arange(T) // d_hat
+    lost = np.bincount(slot_of, weights=(nonself & ~live).sum(axis=1) * w,
+                       minlength=n_slots)
+
+    t_idx, s_idx = np.nonzero(live)
+    key = slot_of[t_idx] * (n * n) + s_idx * n + eff[t_idx, s_idx]
+    upid, inv = np.unique(key, return_inverse=True)
+    cap = np.bincount(inv, weights=np.full(len(key), w))
+    bounds = np.searchsorted(upid // (n * n), np.arange(n_slots + 1))
+    pid_u = upid % (n * n)
+    plans = [(pid_u[bounds[s]:bounds[s + 1]], cap[bounds[s]:bounds[s + 1]])
+             for s in range(n_slots)]
+    # same claim counting as schedule_disagreement(scheds, owner), reused
+    return _FabricPlan(plans=plans, n_slots=n_slots,
+                       disagreement=float(contested.mean()),
+                       lost=lost, groups=len(scheds))
 
 
 def _quantizer_unit(
@@ -1050,8 +1177,23 @@ class AdaptiveCase:
       * ``"oblivious"`` — round-robin baseline, never recomputed.
 
     ``gather_steps``: AllGather slots executed per estimation round; fewer
-    than ``n - 1`` models a partial (mid-phase-failure) gather whose missing
-    rows are zero at the deciding node.
+    than ``n - 1`` models a partial (mid-phase-failure) gather.  Appendix A
+    has *every* ToR compute the next schedule from its own assembled
+    matrix, so under a partial gather the per-node views differ (missing
+    rows zero at each node) and the loop runs a true per-node control
+    plane: each node hot-swaps to the schedule of *its* view (identical
+    views deduplicated — a complete gather builds exactly one schedule,
+    reproducing the single-leader loop bit-for-bit), and the data plane
+    serves the merged, generally non-matching port configuration with
+    output-port contention resolved per ``collision``.
+
+    ``collision``: how the data plane resolves two input ports of one
+    plane claiming the same output port (only possible under
+    disagreement): ``"drop"`` loses every contested claim (optical
+    receiver jammed by two carriers — the pessimistic default),
+    ``"lowest"`` grants the lowest-index input (fixed-priority arbiter),
+    ``"receiver"`` grants with rotating per-matching priority (fair
+    receiver-plane arbitration).  See ``_fabric_plan``.
 
     ``oracle_demand``: optional (n_epochs, n, n) true demand-*rate*
     matrices for the oracle/stale policies (e.g. the generating phase-train
@@ -1072,7 +1214,10 @@ class AdaptiveCase:
     more means the loop never catches up: every schedule is superseded
     before activation and the fabric serves on the cold-start plan forever
     — the epoch-length / construction-cost tradeoff the fast decomposition
-    path exists to win.
+    path exists to win.  Under per-node disagreement every ToR builds only
+    its own schedule, all concurrently, so the measured charge is one
+    local construction (total wall-clock / unique views) while
+    ``AdaptiveRow.construction_s`` still accounts the fabric-wide total.
 
     ``method`` selects the ``vermilion_schedule`` decomposition
     (``"euler"`` fast path vs ``"hk"`` reference) — combined with
@@ -1100,6 +1245,7 @@ class AdaptiveCase:
     recfg_frac: float = 0.0
     alpha: float = 0.3                # EWMA weight of the newest epoch
     gather_steps: int | None = None
+    collision: str = "drop"
     normalize: str = "hose"
     seed: int = 0
     oracle_demand: np.ndarray | None = None
@@ -1125,8 +1271,24 @@ class AdaptiveRow:
     stale_slots: int = 0            # slots served by an outdated schedule
                                     # while construction was still running
     construction_s: float = 0.0     # wall-clock spent constructing schedules
+                                    # (summed over all unique per-node views)
     dark_slots: int = 0             # slots lost to reconfiguration darkness
                                     # (reconfig_penalty_slots per hot-swap)
+    epoch_disagreement: np.ndarray = None   # type: ignore[assignment]
+                                    # (n_epochs,) contested fraction of the
+                                    # installed plan's (matching, port)
+                                    # claims, time-weighted over the epoch's
+                                    # slots (reconfiguration-dark slots
+                                    # serve nothing and contribute zero,
+                                    # same time base as collision loss)
+    epoch_collision_loss: np.ndarray = None  # type: ignore[assignment]
+                                    # (n_epochs,) fraction of the epoch's
+                                    # fabric capacity lost to output-port
+                                    # collisions
+    collision_lost_bits: float = 0.0  # total capacity lost to collisions
+    schedule_groups_max: int = 1    # most distinct per-node schedules that
+                                    # were ever live at once (1 = the fabric
+                                    # never disagreed)
 
 
 def _run_adaptive_case(case: AdaptiveCase, bits_per_slot: float) -> AdaptiveRow:
@@ -1144,6 +1306,9 @@ def _run_adaptive_case(case: AdaptiveCase, bits_per_slot: float) -> AdaptiveRow:
     penalty = int(case.reconfig_penalty_slots)
     if penalty < 0:
         raise ValueError("reconfig_penalty_slots must be nonnegative")
+    if case.collision not in _COLLISIONS:
+        raise ValueError(f"collision must be one of {_COLLISIONS} "
+                         f"(got {case.collision!r})")
     wl, n = case.wl, case.wl.n
     E, H = case.epoch_slots, wl.horizon
     n_epochs = -(-H // E)
@@ -1171,17 +1336,18 @@ def _run_adaptive_case(case: AdaptiveCase, bits_per_slot: float) -> AdaptiveRow:
     if oracle_m is None:
         oracle_m = true_epoch / E
 
-    # per-node VOQ byte counters, accumulated over the running epoch (A2)
+    # per-node VOQ byte counters, accumulated over the running epoch (A2);
+    # one fleet estimator batches all n per-node EWMAs (row i = node i)
     counters = np.zeros((n, n))
-    ests = [TrafficEstimator(n=n, alpha=case.alpha) for _ in range(n)]
+    fleet = TrafficEstimator.fleet(n, alpha=case.alpha)
     q_unit = _quantizer_unit(E, case.k, case.d_hat, bits_per_slot)
-
-    def support_plans(sched: Schedule) -> list[tuple[np.ndarray, np.ndarray]]:
-        return [(at * n + v, cap)
-                for at, v, cap in sched.slot_circuits(bits_per_slot)]
 
     construction_s = 0.0
     last_construction = 0.0
+
+    def consistent_plan(sched: Schedule) -> _FabricPlan:
+        return _fabric_plan([sched], np.zeros(n, dtype=np.int64),
+                            bits_per_slot, case.collision)
 
     def vsched(m: np.ndarray, seed: int) -> Schedule:
         nonlocal construction_s, last_construction
@@ -1193,52 +1359,96 @@ def _run_adaptive_case(case: AdaptiveCase, bits_per_slot: float) -> AdaptiveRow:
         construction_s += last_construction
         return s
 
+    def vsched_per_node(views, seed: int, unique) -> _FabricPlan:
+        nonlocal construction_s, last_construction
+        t0 = time.perf_counter()
+        scheds, owner = per_node_schedules(
+            views, k=case.k, d_hat=case.d_hat, recfg_frac=case.recfg_frac,
+            seed=seed, normalize=case.normalize, method=case.method,
+            unique=unique)
+        dt = time.perf_counter() - t0
+        construction_s += dt
+        # every ToR builds only its own schedule, all concurrently: the
+        # fabric waits for one local construction, estimated as the mean
+        # over the (equal-sized) unique views rather than the sum (with a
+        # complete gather there is exactly one view, so this reduces to
+        # the single-schedule charge exactly)
+        last_construction = dt / len(scheds)
+        return _fabric_plan(scheds, owner, bits_per_slot, case.collision)
+
     if case.policy in ("oracle", "stale"):
-        sched = vsched(oracle_m[0], case.seed)
+        fp = consistent_plan(vsched(oracle_m[0], case.seed))
     else:  # adaptive cold start (no estimate yet) and oblivious baseline
-        sched = oblivious_schedule(n, d_hat=case.d_hat,
-                                   recfg_frac=case.recfg_frac)
-    plans = support_plans(sched)
-    sched_t0 = 0                    # slot the current schedule was installed
-    pending: tuple[int, Schedule] | None = None
+        fp = consistent_plan(oblivious_schedule(n, d_hat=case.d_hat,
+                                                recfg_frac=case.recfg_frac))
+    sched_t0 = 0                    # slot the current plan was installed
+    pending: tuple[int, _FabricPlan] | None = None
 
     delivered_ep = np.zeros(n_epochs)
     est_tv = np.full(n_epochs, np.nan)
+    dis_ep = np.zeros(n_epochs)     # summed per-slot plan disagreement
+    coll_ep = np.zeros(n_epochs)    # bits of capacity lost to collisions
     recomputes = 0
     stale_slots = 0
     dark_until = 0                  # circuits dark while switches retarget
     dark_slots = 0
+    groups_max = 1
 
     for slot in range(H):
         if pending is not None and slot >= pending[0]:
-            sched = pending[1]
-            plans, sched_t0 = support_plans(sched), slot
+            fp, sched_t0 = pending[1], slot
             pending = None
             dark_until = slot + penalty
+            groups_max = max(groups_max, fp.groups)
         if slot and slot % E == 0:
             epoch = slot // E
             swap = None
             if case.policy == "adaptive":
-                est = estimate_global_matrix(
-                    counters, ests, case.k, q_unit,
+                views = estimate_all_views(
+                    counters, fleet, case.k, q_unit,
                     steps=case.gather_steps)
                 t = true_epoch[epoch - 1]
-                if est.sum() > 0 and t.sum() > 0:
-                    est_tv[epoch - 1] = 0.5 * np.abs(
-                        est / est.sum() - t / t.sum()).sum()
-                if est.sum() > 0:
-                    swap = vsched(est, case.seed + epoch)
+                masks, owner = views.unique()
+                # estimate error: per-node TV distance vs the epoch truth,
+                # averaged over nodes (one term per unique view, weighted
+                # by its group size — a complete gather has one group and
+                # reduces to the historical single-estimate metric).  The
+                # per-view normalizations differ, so the metric is
+                # inherently O(G n^2); G == 1 on the consistent path, and
+                # under full disagreement (G == n) schedule construction
+                # already dominates this same order of work.
+                counts = np.bincount(owner, minlength=masks.shape[0])
+                t_sum = t.sum()
+                tn = t / t_sum if t_sum > 0 else None
+                # cheap emptiness predicate per group (exact for
+                # nonnegative rows); the actual normalizer below keeps the
+                # historical full-matrix summation order bit-for-bit
+                nonempty = (masks @ views.rows.sum(axis=1)) > 0
+                tvs, wts = [], []
+                for g in range(masks.shape[0]):
+                    if tn is not None and nonempty[g]:
+                        est_g = views.rows * masks[g][:, None]
+                        tvs.append(0.5 * np.abs(
+                            est_g / est_g.sum() - tn).sum())
+                        wts.append(counts[g])
+                if tvs:
+                    est_tv[epoch - 1] = float(np.average(tvs, weights=wts))
+                if views.rows.sum() > 0:
+                    swap = vsched_per_node(views, case.seed + epoch,
+                                           (masks, owner))
             elif case.policy == "oracle":
                 if oracle_m[epoch].sum() > 0:
-                    swap = vsched(oracle_m[epoch], case.seed + epoch)
+                    swap = consistent_plan(
+                        vsched(oracle_m[epoch], case.seed + epoch))
             if swap is not None:
                 recomputes += 1
                 charge = (int(np.ceil(last_construction / case.slot_seconds))
                           if measured else int(cs))
                 if charge == 0:
-                    sched, plans, sched_t0 = swap, support_plans(swap), slot
+                    fp, sched_t0 = swap, slot
                     pending = None   # a zero-cost swap supersedes any pending
                     dark_until = slot + penalty
+                    groups_max = max(groups_max, fp.groups)
                 else:
                     # the stale schedule keeps serving until construction
                     # finishes; a recompute next epoch supersedes this one
@@ -1254,9 +1464,14 @@ def _run_adaptive_case(case: AdaptiveCase, bits_per_slot: float) -> AdaptiveRow:
             credit.arrive(newf)
 
         if slot < dark_until:       # reconfiguring: no circuits this slot
-            dark_slots += 1
-            continue
-        spid, scap = plans[(slot - sched_t0) % len(plans)]
+            dark_slots += 1         # (dark slots serve nothing, so they
+            continue                # contribute zero disagreement and zero
+                                    # collision loss — one time base for
+                                    # both per-epoch metrics)
+        dis_ep[slot // E] += fp.disagreement
+        ps = (slot - sched_t0) % fp.n_slots
+        coll_ep[slot // E] += fp.lost[ps]
+        spid, scap = fp.plans[ps]
         q = voq[spid]
         tx = np.minimum(q, scap)
         voq[spid] = q - tx
@@ -1278,7 +1493,11 @@ def _run_adaptive_case(case: AdaptiveCase, bits_per_slot: float) -> AdaptiveRow:
         epoch_utilization=delivered_ep / ep_cap, epoch_estimate_tv=est_tv,
         recomputes=recomputes, sim_s=0.0, meta=dict(case.meta),
         stale_slots=stale_slots, construction_s=construction_s,
-        dark_slots=dark_slots)
+        dark_slots=dark_slots,
+        epoch_disagreement=dis_ep / ep_len,
+        epoch_collision_loss=coll_ep / ep_cap,
+        collision_lost_bits=float(coll_ep.sum()),
+        schedule_groups_max=groups_max)
 
 
 def run_adaptive(
@@ -1293,7 +1512,12 @@ def run_adaptive(
     epoch layer on top harvests the VOQ byte counters each boundary, runs
     the estimation round, and swaps in the recomputed circuit plan while
     VOQs, in-flight flows, and the processor-sharing credit state carry
-    over untouched.
+    over untouched.  Each node swaps to the schedule of *its own*
+    (possibly partial) view; when views disagree the served plan is the
+    collision-resolved merge of the per-node schedules (see
+    :class:`AdaptiveCase` — ``gather_steps``, ``collision``) and the rows
+    report per-epoch disagreement and collision-loss alongside
+    utilization.
     """
     rows = []
     for case in cases:

@@ -108,9 +108,14 @@ def test_closed_loop_converges_to_oracle_on_stationary_traffic():
 
 
 def test_partial_gather_degrades_gracefully():
-    """steps < n-1 leaves most rows unseen at the deciding node: the loop
-    still runs (no crash), but both the estimate and the resulting schedule
-    are measurably worse than the full gather's."""
+    """steps < n-1 leaves most rows unseen at each node: the loop still
+    runs (no crash), the per-node estimates are measurably worse than the
+    full gather's, and the fabric actually disagrees — every node swaps to
+    the schedule of its own view, output-port contention costs capacity,
+    and utilization can only suffer.  (Each node always holds its *own*
+    row, so on permutation traffic the hot circuits stay mostly
+    uncontested — the loss concentrates on the padding circuits, which is
+    exactly what the disagreement/collision accounting surfaces.)"""
     n, E = 12, 150
     wl = _stationary(n=n, horizon=1500)
     common = dict(wl=wl, epoch_slots=E, policy="adaptive", d_hat=2,
@@ -123,8 +128,17 @@ def test_partial_gather_degrades_gracefully():
     tv_full = np.nanmean(full.epoch_estimate_tv[3:])
     tv_part = np.nanmean(partial.epoch_estimate_tv[3:])
     assert tv_part > tv_full + 0.1
+    # the consistent fabric never disagrees; the partial one does, on
+    # every post-cold-start epoch, with real capacity lost to collisions
+    assert full.schedule_groups_max == 1
+    assert full.collision_lost_bits == 0.0
+    assert (full.epoch_disagreement == 0.0).all()
+    assert partial.schedule_groups_max == n
+    assert np.mean(partial.epoch_disagreement[1:]) > 0.1
+    assert partial.collision_lost_bits > 0
+    assert (partial.epoch_collision_loss[1:] > 0).all()
     assert (partial.result.utilization
-            < full.result.utilization - 0.02)
+            <= full.result.utilization + 1e-9)
 
 
 def test_quantizer_unit_avoids_uint16_clip():

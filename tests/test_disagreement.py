@@ -1,0 +1,214 @@
+"""Per-node schedule disagreement: the Appendix-A control plane where every
+ToR computes the next schedule from its own assembled matrix.
+
+Covers the golden complete-gather equivalence (the per-node path must be
+bit-identical to the historical single-leader adaptive loop when the gather
+completes), the disagreement metric, and the data plane's output-port
+collision resolution (drop / lowest-index-wins / receiver arbitration).
+"""
+import numpy as np
+import pytest
+
+from repro.core.estimation import (
+    TrafficEstimator,
+    estimate_all_views,
+    estimate_global_matrix,
+    ring_all_views,
+)
+from repro.core.schedule import (
+    Schedule,
+    effective_perms,
+    oblivious_schedule,
+    per_node_schedules,
+    schedule_disagreement,
+    vermilion_schedule,
+)
+from repro.core.simulator import (
+    AdaptiveCase,
+    phase_shifting_workload,
+    run_adaptive,
+)
+
+BPS = 100e9 * 4.5e-6
+RECFG = 1 / 9
+
+
+# ---------------------------------------------------------------------------
+# Golden equivalence: complete gather == the single-leader adaptive loop
+# ---------------------------------------------------------------------------
+
+def test_complete_gather_bit_identical_to_leader_loop():
+    """Acceptance: with a complete gather every node's view is the full
+    matrix, the per-node schedules dedup to one, and the loop reproduces
+    the historical leader-view adaptive trace bit-for-bit.  The golden
+    numbers were recorded from the leader-view implementation immediately
+    before the per-node control plane replaced it (same workload, same
+    seeds)."""
+    wl = phase_shifting_workload(12, 0.5, 1500, BPS, d_hat=2, seed=1,
+                                 phases=("permutation", "uniform"),
+                                 shift_period=500)
+    full, explicit = run_adaptive([
+        AdaptiveCase(wl, 150, "adaptive", d_hat=2, recfg_frac=RECFG,
+                     alpha=0.5, label="full"),
+        AdaptiveCase(wl, 150, "adaptive", d_hat=2, recfg_frac=RECFG,
+                     alpha=0.5, gather_steps=wl.n - 1, label="explicit"),
+    ], BPS)
+    for row in (full, explicit):
+        r = row.result
+        f = r.fct_slots[np.isfinite(r.fct_slots)]
+        assert r.delivered_bits == 5478161681.785027
+        assert f.sum() == 75071.0 and len(f) == 1426
+        assert row.recomputes == 9
+        assert float(np.nanmean(row.epoch_estimate_tv)) == 0.27791662160078046
+        # a consistent fabric: one schedule, no contention, ever
+        assert row.schedule_groups_max == 1
+        assert (row.epoch_disagreement == 0.0).all()
+        assert row.collision_lost_bits == 0.0
+    # collision resolution is irrelevant when nobody disagrees
+    for mode in ("lowest", "receiver"):
+        row = run_adaptive([
+            AdaptiveCase(wl, 150, "adaptive", d_hat=2, recfg_frac=RECFG,
+                         alpha=0.5, collision=mode)], BPS)[0]
+        assert row.result.delivered_bits == 5478161681.785027
+
+
+def test_per_node_schedules_dedup_complete_gather():
+    """Complete gather: one unique view, one schedule, matching-for-
+    matching what the single-leader path builds from the same estimate."""
+    n, k, bps = 10, 3, 1e4
+    rng = np.random.default_rng(7)
+    period = rng.random((n, n)) * 1e6
+    fleet = TrafficEstimator.fleet(n, alpha=0.4)
+    views = estimate_all_views(period, fleet, k, bps)
+    scheds, owner = per_node_schedules(views, k=k, d_hat=2, seed=5)
+    assert len(scheds) == 1
+    assert (owner == 0).all()
+    est = estimate_global_matrix(
+        period, [TrafficEstimator(n=n, alpha=0.4) for _ in range(n)], k, bps)
+    ref = vermilion_schedule(est, k=k, d_hat=2, seed=5)
+    assert np.array_equal(scheds[0].perms, ref.perms)
+
+
+def test_per_node_schedules_partial_gather_differ():
+    """Partial gather with distinct nonzero rows: every node's view (and
+    schedule) is its own, yet all share the (T, n_slots, d_hat) footprint
+    so the fabric can merge them."""
+    n, k = 8, 3
+    rng = np.random.default_rng(3)
+    rows = rng.random((n, n)) * 1e5 + 10.0
+    views = ring_all_views(rows, steps=2)
+    scheds, owner = per_node_schedules(views, k=k, d_hat=2, seed=1)
+    assert len(scheds) == n
+    assert len(set(owner.tolist())) == n
+    assert {s.T for s in scheds} == {k * n}
+    assert {s.d_hat for s in scheds} == {2}
+    dis = schedule_disagreement(scheds, owner)
+    assert 0.0 < dis < 1.0
+
+
+# ---------------------------------------------------------------------------
+# Disagreement metric
+# ---------------------------------------------------------------------------
+
+def test_schedule_disagreement_zero_when_consistent():
+    n = 6
+    s = oblivious_schedule(n, d_hat=2)
+    assert schedule_disagreement([s], np.zeros(n, dtype=int)) == 0.0
+    # several copies of the same plan are still consistent
+    assert schedule_disagreement([s, s], np.array([0, 1, 0, 1, 0, 1])) == 0.0
+
+
+def test_schedule_disagreement_counts_contested_claims():
+    """Hand-built 1-matching schedules: nodes 0/1 both claim port 2 in the
+    merged matching -> 2 of 4 claims contested."""
+    a = Schedule(perms=np.array([[2, 3, 0, 1]]))
+    b = Schedule(perms=np.array([[3, 2, 1, 0]]))
+    owner = np.array([0, 1, 0, 0])
+    eff = effective_perms([a, b], owner)
+    assert (eff == np.array([[2, 2, 0, 1]])).all()
+    assert schedule_disagreement([a, b], owner) == pytest.approx(0.5)
+
+
+def test_effective_perms_rejects_mismatched_footprint():
+    a = oblivious_schedule(6)
+    b = vermilion_schedule(np.ones((6, 6)), k=2)   # T = 12 != 5
+    with pytest.raises(ValueError):
+        effective_perms([a, b], np.zeros(6, dtype=int))
+    with pytest.raises(ValueError):
+        effective_perms([a], np.zeros(4, dtype=int))   # owner too short
+
+
+# ---------------------------------------------------------------------------
+# Collision resolution in the data plane
+# ---------------------------------------------------------------------------
+
+def _partial_rows(n=12, horizon=1500, seed=1):
+    wl = phase_shifting_workload(n, 0.5, horizon, BPS, d_hat=2, seed=seed,
+                                 phases=("permutation", "uniform"),
+                                 shift_period=500)
+    common = dict(wl=wl, epoch_slots=150, policy="adaptive", d_hat=2,
+                  recfg_frac=RECFG, alpha=0.5, gather_steps=3)
+    return run_adaptive([
+        AdaptiveCase(collision="drop", label="drop", **common),
+        AdaptiveCase(collision="lowest", label="lowest", **common),
+        AdaptiveCase(collision="receiver", label="receiver", **common),
+    ], BPS)
+
+
+def test_collision_resolution_ordering():
+    """drop loses every contested claim; lowest/receiver salvage one per
+    port — so drop strictly loses more capacity, and arbitration can only
+    help delivered throughput (up to scheduling noise)."""
+    drop, lowest, receiver = _partial_rows()
+    # identical control planes: same estimation, same per-node schedules
+    assert drop.recomputes == lowest.recomputes == receiver.recomputes > 0
+    assert np.allclose(drop.epoch_disagreement, lowest.epoch_disagreement)
+    assert np.allclose(drop.epoch_disagreement, receiver.epoch_disagreement)
+    # but different data planes: contention cost is ordered
+    assert drop.collision_lost_bits > lowest.collision_lost_bits > 0
+    assert drop.collision_lost_bits > receiver.collision_lost_bits > 0
+    assert lowest.result.utilization > drop.result.utilization - 1e-9
+    assert receiver.result.utilization > drop.result.utilization - 1e-9
+
+
+def test_collision_accounting_consistency():
+    """Per-epoch collision loss sums back to the scalar total (all epochs
+    are full 150-slot epochs here, n=12, d_hat=2), and delivered bits
+    never exceed offered even with the lossy fabric."""
+    ep_cap = 150 * 12 * 2 * BPS
+    for row in _partial_rows():
+        ep = row.epoch_collision_loss
+        assert ep.shape == row.epoch_utilization.shape
+        assert (ep >= 0).all()
+        r = row.result
+        assert r.delivered_bits <= r.offered_bits + 1e-6
+        assert row.collision_lost_bits == pytest.approx(
+            float(ep.sum()) * ep_cap, rel=1e-9)
+        assert row.schedule_groups_max == 12
+
+
+def test_collision_mode_validation():
+    wl = phase_shifting_workload(8, 0.3, 300, BPS, d_hat=2, seed=0,
+                                 phases=("permutation",))
+    with pytest.raises(ValueError):
+        run_adaptive([AdaptiveCase(wl, 100, collision="coinflip")], BPS)
+
+
+def test_consistent_policies_report_zero_disagreement():
+    """oracle / stale / oblivious fabrics are consistent by construction:
+    the new accounting must be exactly zero for them."""
+    n = 10
+    wl = phase_shifting_workload(n, 0.4, 600, BPS, d_hat=2, seed=2,
+                                 phases=("permutation",))
+    n_epochs = 600 // 150
+    oracle_demand = np.stack([wl.demand_matrix()] * n_epochs)
+    rows = run_adaptive([
+        AdaptiveCase(wl, 150, "oracle", d_hat=2, oracle_demand=oracle_demand),
+        AdaptiveCase(wl, 150, "stale", d_hat=2, oracle_demand=oracle_demand),
+        AdaptiveCase(wl, 150, "oblivious", d_hat=2),
+    ], BPS)
+    for row in rows:
+        assert row.schedule_groups_max == 1
+        assert (row.epoch_disagreement == 0.0).all()
+        assert (row.epoch_collision_loss == 0.0).all()
+        assert row.collision_lost_bits == 0.0

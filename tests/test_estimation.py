@@ -1,13 +1,17 @@
 """Appendix A: distributed traffic estimation via AllGather + EWMA."""
 import numpy as np
+import pytest
 
 from repro.core.estimation import (
     TrafficEstimator,
     allgather_rows,
     dequantize,
+    estimate_all_views,
     estimate_global_matrix,
     quantize_row,
+    ring_all_views,
     ring_leader_view,
+    ring_view_mask,
 )
 
 
@@ -93,6 +97,167 @@ def test_quantize_dequantize_roundtrip():
     tick = bps * k / (k - 1)
     assert np.all(back <= row + 1e-9)
     assert np.all(row - back <= tick + 1e-9)
+
+
+def test_quantizer_rejects_degenerate_k():
+    """Regression: k = 1 made the (k-1)/k scale exactly zero — quantize_row
+    returned silent all-zeros and dequantize divided by zero (inf).  Both
+    must refuse with a clear error instead."""
+    row = np.array([1.0, 2.0, 3.0])
+    for k in (1, 0, -2):
+        with pytest.raises(ValueError, match="k must be >= 2"):
+            quantize_row(row, k=k, bits_per_slot=1.0)
+        with pytest.raises(ValueError, match="k must be >= 2"):
+            dequantize(row.astype(np.uint16), k=k, bits_per_slot=1.0)
+    with pytest.raises(ValueError, match="k must be >= 2"):
+        estimate_global_matrix(
+            np.ones((3, 3)), [TrafficEstimator(n=3) for _ in range(3)],
+            k=1, bits_per_slot=1.0)
+    # k = 2 is the smallest legal setting and round-trips
+    q = quantize_row(row, k=2, bits_per_slot=1.0)
+    assert (dequantize(q, k=2, bits_per_slot=1.0) == [0.0, 2.0, 2.0]).all()
+
+
+def test_estimator_update_leaves_input_untouched():
+    """Regression: the old docstring claimed update() "resets counters" —
+    it never did (the simulator owns and resets them).  Pin that the input
+    array is read-only to the estimator, and that the docstring no longer
+    lies."""
+    est = TrafficEstimator(n=4, alpha=0.5)
+    period = np.array([4.0, 2.0, 0.0, 8.0])
+    snapshot = period.copy()
+    out = est.update(period)
+    assert np.array_equal(period, snapshot)
+    assert out is not period
+    # second update still sees the caller's (unreset) counters
+    est.update(period)
+    assert np.array_equal(period, snapshot)
+    # and the docstring no longer claims the reset happens here
+    assert "reset counters" not in (TrafficEstimator.update.__doc__ or "")
+
+
+def test_fleet_estimator_matches_per_node_instances():
+    """One batched (n, n) fleet update is float-identical to n per-node
+    updates."""
+    n = 7
+    rng = np.random.default_rng(11)
+    fleet = TrafficEstimator.fleet(n, alpha=0.3)
+    singles = [TrafficEstimator(n=n, alpha=0.3) for _ in range(n)]
+    for _ in range(4):
+        period = rng.random((n, n)) * 1e5
+        fleet.update(period)
+        for i, est in enumerate(singles):
+            est.update(period[i])
+    assert np.array_equal(fleet.ewma, np.stack([e.ewma for e in singles]))
+
+
+def test_ring_all_views_matches_simulated_gather():
+    """The O(n^2) banded-mask closed form must agree with the simulated
+    ring pipeline for every node at every staleness — it replaces the
+    (n, n, n) exchange tensor on the per-node control-plane path."""
+    n = 9
+    rng = np.random.default_rng(4)
+    rows = rng.integers(0, 1000, size=(n, n)).astype(np.uint16)
+    for steps in (0, 1, 3, n - 2, n - 1, None):
+        ref = allgather_rows(rows, steps=steps)
+        views = ring_all_views(rows, steps=steps)
+        for j in range(n):
+            assert (views.view(j) == ref[j]).all(), (steps, j)
+        # the mask alone reproduces which rows each node holds
+        assert (views.have == ring_view_mask(n, steps)).all()
+
+
+def test_ring_views_unique_grouping():
+    """Complete gather: all n views collapse to one group.  Partial gather
+    with distinct nonzero rows: n groups.  All-zero rows never distinguish
+    views (missing rows are zero-filled anyway)."""
+    n = 8
+    rng = np.random.default_rng(5)
+    rows = rng.integers(1, 100, size=(n, n)).astype(np.uint16)
+    masks, owner = ring_all_views(rows).unique()
+    assert masks.shape[0] == 1 and (owner == 0).all()
+    masks, owner = ring_all_views(rows, steps=2).unique()
+    assert masks.shape[0] == n and len(set(owner.tolist())) == n
+    # zero out all rows except 0: with steps=1 node j holds {j-1, j}, so
+    # nodes 0 and 1 both see exactly row 0 (identical views!) and every
+    # other node sees nothing -> 2 groups
+    rows_z = np.zeros_like(rows)
+    rows_z[0] = rows[0]
+    masks, owner = ring_all_views(rows_z, steps=1).unique()
+    assert masks.shape[0] == 2
+    assert owner[0] == owner[1]
+    assert len({int(owner[j]) for j in range(2, n)}) == 1
+    assert owner[0] != owner[2]
+
+
+def test_estimate_all_views_matches_per_leader_estimates():
+    """estimate_all_views is the whole-fabric batch of
+    estimate_global_matrix: node j's view equals the leader-j estimate,
+    for complete and partial gathers, EWMA state included."""
+    n, k, bps, steps = 8, 3, 1e4, 3
+    rng = np.random.default_rng(6)
+    fleet = TrafficEstimator.fleet(n, alpha=0.4)
+    per_leader = {
+        j: [TrafficEstimator(n=n, alpha=0.4) for _ in range(n)]
+        for j in range(n)
+    }
+    for _ in range(3):                      # EWMA state carries across rounds
+        period = rng.random((n, n)) * 1e6
+        views = estimate_all_views(period, fleet, k, bps, steps=steps)
+        for j in range(n):
+            ref = estimate_global_matrix(period, per_leader[j], k, bps,
+                                         steps=steps, leader=j)
+            assert np.array_equal(views.view(j), ref), j
+
+
+def test_estimate_all_views_requires_fleet_estimator():
+    with pytest.raises(ValueError, match="fleet"):
+        estimate_all_views(np.ones((4, 4)), TrafficEstimator(n=4), 3, 1.0)
+
+
+def test_negative_gather_steps_rejected():
+    """Regression: a negative step count has no physical reading, and the
+    closed-form band masks would silently zero even each node's *own* row
+    (diverging from the simulated gather, which clamps at 0 exchanges).
+    Every gather entry point must refuse instead."""
+    rows = np.ones((5, 5), dtype=np.uint16)
+    for fn in (lambda: allgather_rows(rows, steps=-1),
+               lambda: ring_view_mask(5, steps=-1),
+               lambda: ring_all_views(rows, steps=-1),
+               lambda: ring_leader_view(rows, steps=-1),
+               lambda: estimate_all_views(
+                   rows.astype(float), TrafficEstimator.fleet(5), 3, 1.0,
+                   steps=-1)):
+        with pytest.raises(ValueError, match="steps must be >= 0"):
+            fn()
+    # steps=0 stays legal: every node holds exactly its own row
+    assert (ring_view_mask(5, steps=0) == np.eye(5, dtype=bool)).all()
+
+
+def test_quantizer_saturation_roundtrip():
+    """Demands big enough to clip at 65535 ticks must round-trip through
+    estimate_global_matrix without overflow: the estimate saturates at the
+    tick ceiling (never wraps), keeps its direction, and still yields a
+    valid schedule."""
+    from repro.core.schedule import vermilion_schedule
+
+    n, k, bps = 8, 3, 1e4
+    tick = bps * k / (k - 1)
+    period = np.full((n, n), 1e12)          # ~1e8 ticks >> 65535: hard clip
+    np.fill_diagonal(period, 0.0)
+    period[0, 1] = 1e14                     # even hotter: same ceiling
+    ests = [TrafficEstimator(n=n, alpha=1.0) for _ in range(n)]
+    g = estimate_global_matrix(period, ests, k, bps)
+    off = ~np.eye(n, dtype=bool)
+    assert g.max() == 65535 * tick          # saturated, not wrapped
+    assert (g[off] == 65535 * tick).all()   # uniform ceiling off-diagonal
+    assert (g >= 0).all()
+    sched = vermilion_schedule(g, k=k, d_hat=2)
+    assert sched.T == k * n                 # degraded gracefully to uniform
+    # per-node batch path saturates identically
+    views = estimate_all_views(period, TrafficEstimator.fleet(n, alpha=1.0),
+                               k, bps)
+    assert np.array_equal(views.view(0), g)
 
 
 def test_estimate_global_matrix_partial_gather():
