@@ -104,6 +104,23 @@ def main():
               f"collision_loss={np.mean(rd.epoch_collision_loss):.3f} "
               f"distinct schedules={rd.schedule_groups_max}")
 
+    print("=== 6. Invariants & analysis (repro.analysis) ===")
+    # every engine accepts sanitize=True (or REPRO_SANITIZE=1): read-only
+    # contract checks — bit conservation, partial-matching capacity,
+    # disagreement-accounting closure, flow-credit closure — that raise
+    # SanitizeError on violation and are bit-identical when they pass
+    rows = run_sweep(
+        [SweepCase(sched, wl, "single_hop", "sanitized")],
+        bits_per_slot, sanitize=True)
+    print(f"  sanitized sweep: util={rows[0].result.utilization:.3f} "
+          "(all contract checks passed)")
+    # the static half is the repo lint: python -m repro.analysis.lint
+    # src tests  (rules R1-R4; non-core legacy findings are frozen in
+    # src/repro/analysis/baseline.json, core stays at zero)
+    from repro.analysis.lint import main as lint_main
+    rc = lint_main(["src/repro/core", "--no-baseline"])
+    print(f"  lint src/repro/core: exit {rc}")
+
 
 if __name__ == "__main__":
     main()

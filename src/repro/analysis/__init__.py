@@ -1,0 +1,27 @@
+"""Repo-specific static analysis + runtime simulation sanitizer.
+
+Two mechanically-enforced layers guard the invariants PRs 1-5 established
+by hand:
+
+* :mod:`repro.analysis.lint` — an AST-based static lint
+  (``python -m repro.analysis.lint src tests``) with four repo-specific
+  rules: R1 dense fabric-sized allocations on hot-path modules, R2 jit
+  hygiene (un-jitted scans, jit-in-loop, traced branching), R3
+  ``pytest.importorskip("jax")`` guards in tests, R4 dtype discipline
+  (implicit jnp dtypes, uint16 wrap risk).  Pre-existing violations
+  outside ``core/`` are frozen in ``baseline.json``; new ones fail CI.
+* :mod:`repro.analysis.sanitize` — runtime contract checks the simulator
+  engines run when ``REPRO_SANITIZE=1`` (or ``sanitize=True``): bit
+  conservation, schedule validity / partial-matching plans,
+  disagreement-accounting closure, and shape/dtype contracts on the core
+  kernel entry points.  Checks only observe — a sanitized run is
+  bit-identical to an unsanitized one.
+"""
+from .sanitize import SanitizeError, Sanitizer, make_sanitizer, sanitize_enabled
+
+__all__ = [
+    "SanitizeError",
+    "Sanitizer",
+    "make_sanitizer",
+    "sanitize_enabled",
+]

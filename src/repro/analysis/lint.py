@@ -1,0 +1,535 @@
+"""Repo-specific AST lint: mechanical enforcement of the hot-path invariants.
+
+Usage::
+
+    PYTHONPATH=src python -m repro.analysis.lint src tests
+    PYTHONPATH=src python -m repro.analysis.lint --write-baseline src tests
+
+Rules
+=====
+* **R1 dense-alloc** (hot-path modules only, see ``HOT_PATH_MODULES``):
+  a dense ``(..., n, n)`` / ``(n_slots, n, n)`` allocation — an
+  ``np.zeros``/``jnp.ones``/... call whose shape has >= 3 dims of which
+  >= 2 trace to fabric-size symbols (``n``, ``n_slots``, ``T``), a flat
+  product allocation with >= 3 factors of which >= 2 are fabric-sized
+  (``np.zeros(B * n * n)``), or an ``einsum`` whose output subscript has
+  >= 3 indices.  These are exactly the structures the ROADMAP's
+  "no dense (n, n) intermediates on the hot path" rule forbids at
+  n = 2048-8192.  Escape hatch for deliberately dense code (reference
+  engines, documented small-n paths, inherent VOQ state):
+  ``# lint: allow-dense`` on the allocation line or the line above.
+* **R2 jit-hygiene**: ``lax.scan`` / ``lax.fori_loop`` / ``lax.while_loop``
+  called outside any ``jax.jit``-compiled function (decorated, or wrapped
+  via ``jax.jit(fn)`` anywhere in the module — the PR 4 compile-cache
+  pattern); ``jax.jit`` invoked inside a loop or on a fresh ``lambda``
+  (a per-call closure retraces every call); Python ``if``/``while``
+  branching on a ``jnp.*`` value inside a jitted function.  Escape hatch:
+  ``# lint: allow-jit``.
+* **R3 jax-guard** (test files only): a file under ``tests/`` that imports
+  ``jax`` must guard with ``pytest.importorskip("jax")`` before the import
+  (module level, or earlier in the same function for local imports) — the
+  nojax CI job depends on this contract.  Escape hatch:
+  ``# lint: allow-guard``.
+* **R4 dtype**: ``jnp.array``/``asarray``/``zeros``/``ones``/``full``/
+  ``empty`` without an explicit dtype (silent float64-vs-float32 promotion
+  ambiguity between the NumPy and jax engines), and arithmetic directly on
+  a ``.astype(np.uint16)`` expression (the A1 quantizer's 16-bit counters
+  wrap silently).  Escape hatch: ``# lint: allow-dtype``.
+
+Baseline
+========
+``baseline.json`` (next to this module) freezes pre-existing violations
+outside ``core/``: a violation matching an unconsumed baseline entry
+(same file, rule, and source snippet) is suppressed; anything beyond the
+frozen counts fails.  ``core/`` itself carries zero baseline entries — new
+core violations always fail.  ``--write-baseline`` regenerates the file
+from the current tree.
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import json
+import os
+import re
+import sys
+from dataclasses import dataclass
+
+__all__ = [
+    "Violation",
+    "lint_file",
+    "lint_paths",
+    "load_baseline",
+    "apply_baseline",
+    "main",
+    "DEFAULT_BASELINE",
+    "HOT_PATH_MODULES",
+]
+
+# Fabric-size symbols: identifiers (bare or attribute tails like ``self.n``,
+# ``wl.n``, ``sched.n_slots``) whose product spans the whole fabric.
+FABRIC_NAMES = frozenset({"n", "n_slots", "T"})
+
+# Modules under the ROADMAP's "no dense (n, n) intermediates" rule.  R1
+# runs only here: the control/analysis-plane modules (traffic, throughput,
+# rounding, ...) legitimately hold O(n^2) matrices.
+HOT_PATH_MODULES = (
+    "repro/core/simulator.py",
+    "repro/core/schedule.py",
+    "repro/core/estimation.py",
+    "repro/core/matching.py",
+)
+
+_ALLOC_FNS = frozenset({"zeros", "ones", "empty", "full"})
+_ARRAY_MODULES = frozenset({"np", "jnp", "numpy"})
+_JNP_DTYPE_FNS = {  # fn -> positional index of the dtype argument
+    "zeros": 1, "ones": 1, "empty": 1, "array": 1, "asarray": 1, "full": 2,
+}
+_SCAN_FNS = frozenset({"scan", "fori_loop", "while_loop"})
+
+DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), "baseline.json")
+
+_ALLOW_RE = re.compile(r"#\s*lint:\s*allow-([a-z-]+)")
+
+
+@dataclass(frozen=True)
+class Violation:
+    path: str          # repo-relative posix path
+    line: int
+    rule: str          # "R1".."R4"
+    tag: str           # escape-hatch tag ("dense", "jit", "guard", "dtype")
+    msg: str
+    snippet: str       # stripped source line (baseline fingerprint)
+
+    def __str__(self) -> str:
+        return (f"{self.path}:{self.line}: {self.rule}[{self.tag}] "
+                f"{self.msg}\n    {self.snippet}")
+
+
+def _norm(path: str) -> str:
+    rel = os.path.relpath(path)
+    return rel.replace(os.sep, "/")
+
+
+def _is_hot_path(path: str) -> bool:
+    return any(path.endswith(m) for m in HOT_PATH_MODULES)
+
+
+def _is_test_file(path: str) -> bool:
+    parts = path.split("/")
+    return "tests" in parts[:-1] and parts[-1].endswith(".py")
+
+
+def _dotted(node: ast.AST) -> str:
+    """Best-effort dotted name of an expression ('jax.lax.scan', 'np')."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        base = _dotted(node.value)
+        return f"{base}.{node.attr}" if base else node.attr
+    if isinstance(node, ast.Call):
+        return _dotted(node.func)
+    return ""
+
+
+def _is_fabric(node: ast.AST) -> bool:
+    """True if the expression references a fabric-size symbol."""
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Name) and sub.id in FABRIC_NAMES:
+            return True
+        if isinstance(sub, ast.Attribute) and sub.attr in FABRIC_NAMES:
+            return True
+    return False
+
+
+def _mult_factors(node: ast.AST) -> list[ast.AST]:
+    """Flatten a multiplication chain ``B * n * n`` into its factors."""
+    if isinstance(node, ast.BinOp) and isinstance(node.op, ast.Mult):
+        return _mult_factors(node.left) + _mult_factors(node.right)
+    return [node]
+
+
+class _Linter(ast.NodeVisitor):
+    """Single-file rule visitor.  A first pass collects module facts
+    (jit-wrapped names, importorskip guards); the visit pass reports."""
+
+    def __init__(self, path: str, tree: ast.Module, lines: list[str]):
+        self.path = path
+        self.lines = lines
+        self.hot = _is_hot_path(path)
+        self.test = _is_test_file(path)
+        self.out: list[Violation] = []
+        self.fn_stack: list[ast.AST] = []   # enclosing FunctionDefs
+        self.loop_depth = 0
+        self.jitted: set[str] = set()
+        self.module_guard_line: int | None = None
+        self._collect_facts(tree)
+
+    # -- fact collection ----------------------------------------------------
+
+    def _collect_facts(self, tree: ast.Module) -> None:
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Call):
+                name = _dotted(node.func)
+                if name in ("jax.jit", "jit"):
+                    for arg in node.args:
+                        if isinstance(arg, ast.Name):
+                            self.jitted.add(arg.id)
+                elif name == "pytest.importorskip" and node.args:
+                    a = node.args[0]
+                    if (isinstance(a, ast.Constant) and a.value == "jax"
+                            and self.module_guard_line is None):
+                        self.module_guard_line = node.lineno
+            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for dec in node.decorator_list:
+                    d = _dotted(dec)
+                    if d in ("jax.jit", "jit") or d.startswith(("jax.jit", "jit", "partial")):
+                        if "jit" in d:
+                            self.jitted.add(node.name)
+
+    # -- reporting ----------------------------------------------------------
+
+    def _allowed(self, line: int, tag: str) -> bool:
+        for ln in (line, line - 1):
+            if 1 <= ln <= len(self.lines):
+                m = _ALLOW_RE.search(self.lines[ln - 1])
+                if m and m.group(1) == tag:
+                    return True
+        return False
+
+    def _report(self, node: ast.AST, rule: str, tag: str, msg: str) -> None:
+        line = getattr(node, "lineno", 1)
+        if self._allowed(line, tag):
+            return
+        snippet = (self.lines[line - 1].strip()
+                   if 1 <= line <= len(self.lines) else "")
+        self.out.append(Violation(self.path, line, rule, tag, msg, snippet))
+
+    # -- traversal state ----------------------------------------------------
+
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        self.fn_stack.append(node)
+        self.generic_visit(node)
+        self.fn_stack.pop()
+
+    visit_AsyncFunctionDef = visit_FunctionDef  # type: ignore[assignment]
+
+    def visit_For(self, node: ast.For) -> None:
+        self.loop_depth += 1
+        self.generic_visit(node)
+        self.loop_depth -= 1
+
+    def visit_While(self, node: ast.While) -> None:
+        self._check_traced_branch(node)
+        self.loop_depth += 1
+        self.generic_visit(node)
+        self.loop_depth -= 1
+
+    def visit_If(self, node: ast.If) -> None:
+        self._check_traced_branch(node)
+        self.generic_visit(node)
+
+    def _in_jitted_fn(self) -> bool:
+        return any(getattr(f, "name", "") in self.jitted
+                   for f in self.fn_stack)
+
+    def _check_traced_branch(self, node: ast.If | ast.While) -> None:
+        """R2: Python control flow on a traced ``jnp.*`` value inside a
+        jitted function — a TracerBoolConversionError at best, a silently
+        baked-in branch at worst."""
+        if not self._in_jitted_fn():
+            return
+        for sub in ast.walk(node.test):
+            if isinstance(sub, ast.Call) and _dotted(sub.func).startswith("jnp."):
+                self._report(
+                    node, "R2", "jit",
+                    "Python branching on a jnp value inside a jitted "
+                    "function (use lax.cond / jnp.where)")
+                return
+
+    # -- rules --------------------------------------------------------------
+
+    def visit_Call(self, node: ast.Call) -> None:
+        name = _dotted(node.func)
+        self._r1_dense_alloc(node, name)
+        self._r2_jit(node, name)
+        self._r4_dtype(node, name)
+        self.generic_visit(node)
+
+    def _r1_dense_alloc(self, node: ast.Call, name: str) -> None:
+        if not self.hot:
+            return
+        parts = name.split(".")
+        if len(parts) != 2 or parts[0] not in _ARRAY_MODULES:
+            return
+        mod, fn = parts
+        if fn == "einsum":
+            if node.args and isinstance(node.args[0], ast.Constant) \
+                    and isinstance(node.args[0].value, str):
+                spec = node.args[0].value
+                out = spec.split("->")[-1] if "->" in spec else ""
+                if len(out.strip()) >= 3:
+                    self._report(
+                        node, "R1", "dense",
+                        f"einsum producing a dense >=3-D output "
+                        f"({spec!r}) on a hot-path module")
+            return
+        if fn not in _ALLOC_FNS or not node.args:
+            return
+        shape = node.args[0]
+        if isinstance(shape, (ast.Tuple, ast.List)):
+            dims = shape.elts
+            fabric = sum(_is_fabric(d) for d in dims)
+            if len(dims) >= 3 and fabric >= 2:
+                self._report(
+                    node, "R1", "dense",
+                    f"dense {len(dims)}-D allocation with {fabric} "
+                    "fabric-sized dims (keep hot-path structures sparse)")
+        else:
+            factors = _mult_factors(shape)
+            fabric = sum(_is_fabric(f) for f in factors)
+            if len(factors) >= 3 and fabric >= 2:
+                self._report(
+                    node, "R1", "dense",
+                    f"flat allocation of a {len(factors)}-factor product "
+                    f"with {fabric} fabric-sized factors")
+
+    def _r2_jit(self, node: ast.Call, name: str) -> None:
+        tail = name.split(".")[-1]
+        if tail in _SCAN_FNS and (
+                name.startswith("lax.") or name.startswith("jax.lax.")):
+            if not self._in_jitted_fn():
+                self._report(
+                    node, "R2", "jit",
+                    f"{name} outside any jax.jit-compiled function "
+                    "(every call retraces the scan body — route through "
+                    "the module compile cache)")
+        if name in ("jax.jit", "jit"):
+            if self.loop_depth > 0:
+                self._report(
+                    node, "R2", "jit",
+                    "jax.jit inside a loop (compile once at module scope "
+                    "or behind a cache)")
+            if node.args and isinstance(node.args[0], ast.Lambda):
+                self._report(
+                    node, "R2", "jit",
+                    "jax.jit on a fresh lambda (a per-call closure "
+                    "retraces every call)")
+
+    def _r4_dtype(self, node: ast.Call, name: str) -> None:
+        parts = name.split(".")
+        if len(parts) == 2 and parts[0] == "jnp" \
+                and parts[1] in _JNP_DTYPE_FNS:
+            pos = _JNP_DTYPE_FNS[parts[1]]
+            has_dtype = (len(node.args) > pos
+                         or any(k.arg == "dtype" for k in node.keywords))
+            if not has_dtype:
+                self._report(
+                    node, "R4", "dtype",
+                    f"jnp.{parts[1]} without an explicit dtype (float64 "
+                    "vs float32 promotion is engine-dependent)")
+
+    def visit_BinOp(self, node: ast.BinOp) -> None:
+        if isinstance(node.op, (ast.Add, ast.Sub, ast.Mult)):
+            for side in (node.left, node.right):
+                if self._is_uint16_cast(side):
+                    self._report(
+                        node, "R4", "dtype",
+                        "arithmetic directly on a uint16 cast (the 16-bit "
+                        "quantizer counters wrap silently — widen first)")
+                    break
+        self.generic_visit(node)
+
+    @staticmethod
+    def _is_uint16_cast(node: ast.AST) -> bool:
+        if isinstance(node, ast.Call) and isinstance(node.func, ast.Attribute) \
+                and node.func.attr == "astype" and node.args:
+            a = node.args[0]
+            return (_dotted(a).endswith("uint16")
+                    or (isinstance(a, ast.Constant) and a.value == "uint16"))
+        return False
+
+    # -- R3: jax import guards in tests -------------------------------------
+
+    def _guarded(self, lineno: int) -> bool:
+        if self.module_guard_line is not None \
+                and self.module_guard_line < lineno:
+            return True
+        # local import: an importorskip earlier in the enclosing function
+        for fn in self.fn_stack:
+            for sub in ast.walk(fn):
+                if isinstance(sub, ast.Call) \
+                        and _dotted(sub.func) == "pytest.importorskip" \
+                        and sub.args \
+                        and isinstance(sub.args[0], ast.Constant) \
+                        and sub.args[0].value == "jax" \
+                        and sub.lineno < lineno:
+                    return True
+        return False
+
+    def _r3_import(self, node: ast.Import | ast.ImportFrom) -> None:
+        if not self.test:
+            return
+        if isinstance(node, ast.Import):
+            names = [a.name for a in node.names]
+        else:
+            names = [node.module or ""]
+        if not any(m == "jax" or m.startswith("jax.") for m in names):
+            return
+        if not self._guarded(node.lineno):
+            self._report(
+                node, "R3", "guard",
+                'jax import without a preceding pytest.importorskip("jax") '
+                "(the nojax CI job depends on this guard)")
+
+    def visit_Import(self, node: ast.Import) -> None:
+        self._r3_import(node)
+        self.generic_visit(node)
+
+    def visit_ImportFrom(self, node: ast.ImportFrom) -> None:
+        self._r3_import(node)
+        self.generic_visit(node)
+
+
+def lint_file(path: str, source: str | None = None) -> list[Violation]:
+    """Lint one file; returns its violations (no baseline applied)."""
+    norm = _norm(path)
+    if source is None:
+        with open(path, encoding="utf-8") as f:
+            source = f.read()
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as e:
+        return [Violation(norm, e.lineno or 1, "R0", "syntax",
+                          f"syntax error: {e.msg}", "")]
+    linter = _Linter(norm, tree, source.splitlines())
+    linter.visit(tree)
+    return sorted(linter.out, key=lambda v: (v.path, v.line))
+
+
+def _iter_py(paths: list[str]):
+    for p in paths:
+        if os.path.isfile(p):
+            if p.endswith(".py"):
+                yield p
+        else:
+            for root, dirs, files in os.walk(p):
+                dirs[:] = sorted(d for d in dirs
+                                 if not d.startswith((".", "__pycache__")))
+                for f in sorted(files):
+                    if f.endswith(".py"):
+                        yield os.path.join(root, f)
+
+
+def lint_paths(paths: list[str]) -> list[Violation]:
+    out: list[Violation] = []
+    for p in _iter_py(paths):
+        out.extend(lint_file(p))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Baseline: freeze pre-existing violations outside core/
+# ---------------------------------------------------------------------------
+
+def _fingerprint(v: Violation) -> tuple[str, str, str]:
+    return (v.path, v.rule, v.snippet)
+
+
+def load_baseline(path: str) -> dict:
+    with open(path, encoding="utf-8") as f:
+        return json.load(f)
+
+
+def apply_baseline(
+    violations: list[Violation], baseline: dict
+) -> tuple[list[Violation], int]:
+    """Suppress violations matching unconsumed baseline entries.
+
+    Returns ``(new_violations, suppressed_count)``.  Each baseline entry
+    ``{file, rule, snippet, count}`` absorbs up to ``count`` matching
+    violations; anything beyond is new and fails.
+    """
+    budget: dict[tuple[str, str, str], int] = {}
+    for e in baseline.get("entries", []):
+        key = (e["file"], e["rule"], e["snippet"])
+        budget[key] = budget.get(key, 0) + int(e.get("count", 1))
+    fresh, suppressed = [], 0
+    for v in violations:
+        key = _fingerprint(v)
+        if budget.get(key, 0) > 0:
+            budget[key] -= 1
+            suppressed += 1
+        else:
+            fresh.append(v)
+    return fresh, suppressed
+
+
+def write_baseline(violations: list[Violation], path: str) -> dict:
+    counts: dict[tuple[str, str, str], int] = {}
+    for v in violations:
+        counts[_fingerprint(v)] = counts.get(_fingerprint(v), 0) + 1
+    entries = [
+        {"file": f, "rule": r, "snippet": s, "count": c}
+        for (f, r, s), c in sorted(counts.items())
+    ]
+    data = {"version": 1, "entries": entries}
+    with open(path, "w", encoding="utf-8") as f:
+        json.dump(data, f, indent=1)
+        f.write("\n")
+    return data
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="Repo-specific static lint (rules R1-R4).")
+    ap.add_argument("paths", nargs="*", default=["src", "tests"],
+                    help="files or directories to lint (default: src tests)")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help="baseline file (default: the checked-in one)")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="report everything, ignoring the baseline")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="regenerate the baseline from the current tree")
+    ap.add_argument("--forbid-baseline-under", default="src/repro/core",
+                    help="error if the baseline itself holds entries under "
+                         "this prefix (core stays burned down to zero); "
+                         "pass '' to disable")
+    args = ap.parse_args(argv)
+
+    violations = lint_paths(args.paths or ["src", "tests"])
+
+    if args.write_baseline:
+        data = write_baseline(violations, args.baseline)
+        print(f"wrote {len(data['entries'])} baseline entries "
+              f"({len(violations)} violations) to {args.baseline}")
+        return 0
+
+    suppressed = 0
+    if not args.no_baseline and os.path.exists(args.baseline):
+        baseline = load_baseline(args.baseline)
+        if args.forbid_baseline_under:
+            bad = [e for e in baseline.get("entries", [])
+                   if e["file"].startswith(args.forbid_baseline_under)]
+            if bad:
+                print(f"baseline holds {len(bad)} frozen entries under "
+                      f"{args.forbid_baseline_under!r} — core must stay at "
+                      "zero; fix or annotate them instead:")
+                for e in bad:
+                    print(f"  {e['file']}: {e['rule']} {e['snippet']}")
+                return 2
+        violations, suppressed = apply_baseline(violations, baseline)
+
+    for v in violations:
+        print(v)
+    tail = f" ({suppressed} baseline-suppressed)" if suppressed else ""
+    if violations:
+        print(f"\n{len(violations)} new violation(s){tail}")
+        return 1
+    print(f"clean{tail}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

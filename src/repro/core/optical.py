@@ -61,14 +61,14 @@ def schedule_permute(x: jax.Array, sched: Schedule, axis_name: str) -> jax.Array
     """
     n = sched.n
     idx = jax.lax.axis_index(axis_name)
-    fire = jnp.asarray(_first_fire(sched))
+    fire = jnp.asarray(_first_fire(sched), dtype=jnp.bool_)
     out = jnp.zeros_like(x)
     out = out.at[idx].set(x[idx])
     for t in range(sched.T):
         pairs = _perm_pairs(sched.perms[t])
         if not pairs:
             continue
-        perm_arr = jnp.asarray(sched.perms[t])
+        perm_arr = jnp.asarray(sched.perms[t], dtype=jnp.int32)
         dest = perm_arr[idx]
         live = fire[t, idx]
         payload = jnp.where(live, x[dest], jnp.zeros_like(x[dest]))

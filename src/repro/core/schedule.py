@@ -80,6 +80,8 @@ class Schedule:
         costs ~8 * n^2 * n_slots bytes — prefer :meth:`slot_circuits` for
         the sparse engines at large n."""
         t, n = self.T, self.n
+        # deliberately dense (documented small-n path; the sparse engines
+        # consume slot_circuits() instead)  # lint: allow-dense
         out = np.zeros((self.n_slots, n, n), dtype=np.float64)
         slot_of = np.repeat(np.arange(self.n_slots), self.d_hat)[:t]
         np.add.at(

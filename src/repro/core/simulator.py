@@ -89,6 +89,31 @@ The pre-vectorization engine is kept verbatim as
 :func:`simulate_reference`; golden-trace tests pin the new engine to it on
 small instances for all three modes (exact FCT equality; aggregate
 quantities to ~ulp drift from the offset/bucket-total bookkeeping).
+
+Invariants & analysis
+=====================
+The invariants the engines rely on are machine-checked two ways (see
+:mod:`repro.analysis`):
+
+* **Statically** — ``python -m repro.analysis.lint src tests`` enforces
+  the hot-path rules by AST inspection: no dense fabric-sized
+  ``(…, n, n)`` intermediates outside annotated sites (R1 — every
+  deliberate dense structure here carries ``# lint: allow-dense``), jit
+  hygiene for the scan kernels (R2 — scans live inside the module-level
+  compile cache, never per-call), importorskip guards in jax tests (R3),
+  and dtype discipline (R4).
+* **At runtime** — every engine accepts ``sanitize=`` (or the
+  ``REPRO_SANITIZE=1`` env var) and then self-checks per run: bits are
+  conserved (injected = delivered + still-queued VOQ/relay state;
+  collision loss and reconfiguration-dark windows are *capacity*-side in
+  this model, so the bit ledger closes without them), every served slot
+  support is a partial matching post-arbitration (per-port capacity
+  within ``d_hat * bits_per_slot * (1 - recfg_frac)``), pre-merge
+  per-node schedule rows are permutations, merged-plan collision loss
+  never exceeds contested-claim capacity (``_FabricPlan.contested``),
+  and processor-sharing credit closes against delivered bits.  The
+  checks are read-only: a sanitized run is bit-identical to an
+  unsanitized one (pinned in tests/test_analysis.py).
 """
 from __future__ import annotations
 
@@ -97,6 +122,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from ..analysis.sanitize import make_sanitizer
 from .estimation import TrafficEstimator, estimate_all_views
 from .schedule import (
     Schedule,
@@ -149,7 +175,7 @@ class Workload:
 
     def arrival_matrix(self) -> np.ndarray:
         """(horizon, n, n) dense bits arriving per slot (small n only)."""
-        a = np.zeros((self.horizon, self.n, self.n))
+        a = np.zeros((self.horizon, self.n, self.n))  # lint: allow-dense
         np.add.at(a, (self.arrival, self.src, self.dst), self.size)
         return a
 
@@ -359,8 +385,14 @@ def simulate_reference(
     wl: Workload,
     bits_per_slot: float,
     mode: str = "single_hop",
+    sanitize: bool | None = None,
 ) -> SimResult:
-    """Run ``wl`` over ``sched`` for ``wl.horizon`` slots (scalar engine)."""
+    """Run ``wl`` over ``sched`` for ``wl.horizon`` slots (scalar engine).
+
+    ``sanitize``: run the :mod:`repro.analysis.sanitize` contract checks
+    (default: the ``REPRO_SANITIZE`` env var); results are bit-identical
+    either way.
+    """
     n = wl.n
     if sched.n != n:
         raise ValueError("schedule/workload size mismatch")
@@ -369,8 +401,17 @@ def simulate_reference(
     two_hop = mode in ("rotorlb", "vlb")
     if mode not in _MODES:
         raise ValueError(mode)
+    san = make_sanitizer(sanitize)
+    if san is not None:
+        san.check_workload(wl)
+        san.check_schedule(sched)
+        san.check_caps_dense(
+            caps, sched.d_hat, bits_per_slot * (1.0 - sched.recfg_frac),
+            label="reference:caps")
 
     voq = np.zeros((n, n))
+    # the reference oracle is deliberately dense ((n, n, n) relay tensor —
+    # it only ever runs at golden-trace scale)  # lint: allow-dense
     relay = np.zeros((n, n, n)) if two_hop else None  # [at, src, dst]
     tracker = _FlowTracker(wl)
     splits = np.searchsorted(wl.arrival, np.arange(1, wl.horizon))
@@ -430,6 +471,15 @@ def simulate_reference(
         tracker.credit(delivered, slot)
 
     offered = float(wl.size[wl.arrival < wl.horizon].sum())
+    if san is not None:
+        queued = float(voq.sum()) + (float(relay.sum()) if two_hop else 0.0)
+        san.check_conservation(offered, float(delivered_total), queued,
+                               label="reference:conservation")
+        alive = np.isinf(tracker.fct)
+        san.check_credit_closure(
+            offered, float(delivered_total),
+            float(tracker.remaining[alive].sum()),
+            int((~alive).sum()), label="reference:credit")
     ideal = wl.horizon * wl.n * sched.d_hat * bits_per_slot
     return SimResult(
         fct_slots=tracker.fct,
@@ -515,6 +565,17 @@ class _CreditState:
         else:
             self.keys = q
             self.act = newf.copy()
+
+    def remaining_active(self) -> tuple[float, int]:
+        """(total bits still stored for uncompleted flows, completed count)
+        — the sanitizer's credit-closure probe; read-only."""
+        completed = int(np.isfinite(self.fct).sum())
+        if not self.act.size:
+            return 0.0, completed
+        alive = np.isinf(self.fct[self.act])
+        rem = (self.keys["r"][alive]
+               - self.off[self.keys["p"][alive]])
+        return float(np.maximum(rem, 0.0).sum()), completed
 
     def _compact(self) -> None:
         alive = np.isinf(self.fct[self.act])
@@ -708,6 +769,7 @@ def _concat_flows(
 def _simulate_batch_singlehop(
     cases: list[tuple[Schedule, Workload]],
     bits_per_slot: float,
+    san=None,
 ) -> list[SimResult]:
     """Sparse single-hop engine: a slot only moves bits over its <= n*d_hat
     circuits, so the whole slot step is O(B n d_hat) scalar ops on the
@@ -727,9 +789,16 @@ def _simulate_batch_singlehop(
     # straight from the sparse plan (no dense (n_slots, n, n) array)
     ns = [sched.n_slots for sched, _ in cases]
     per_case = []
-    for b, (sched, _) in enumerate(cases):
+    for b, (sched, wl) in enumerate(cases):
+        if san is not None:
+            san.check_workload(wl)
+            san.check_schedule(sched)
         plans = []
-        for at, v, cap in sched.slot_circuits(bits_per_slot):
+        w_b = bits_per_slot * (1.0 - sched.recfg_frac)
+        for ps, (at, v, cap) in enumerate(sched.slot_circuits(bits_per_slot)):
+            if san is not None:
+                san.check_support(at, v, cap, n, sched.d_hat, w_b,
+                                  label=f"singlehop:case{b}:slot{ps}")
             plans.append({
                 "pid": (b * n + at) * n + v,
                 "cap": cap,
@@ -752,7 +821,7 @@ def _simulate_batch_singlehop(
     f_off, pid, f_size, fct, credit, order, bucket = _concat_flows(
         cases, n, horizons, H)
 
-    voq_flat = np.zeros(B * n * n)
+    voq_flat = np.zeros(B * n * n)   # per-pair VOQ state  # lint: allow-dense
     delivered_total = np.zeros(B)
     all_live = bool(np.all(horizons == H))
 
@@ -774,9 +843,14 @@ def _simulate_batch_singlehop(
         credit.credit_pairs(spid, tx, slot)
 
     out = []
+    voq_case = voq_flat.reshape(B, n * n).sum(axis=1)
     for b, (sched, wl) in enumerate(cases):
         sl = slice(f_off[b], f_off[b + 1])
         offered = float(wl.size[wl.arrival < wl.horizon].sum())
+        if san is not None:
+            san.check_conservation(
+                offered, float(delivered_total[b]), float(voq_case[b]),
+                label=f"singlehop:case{b}:conservation")
         ideal = wl.horizon * n * sched.d_hat * bits_per_slot
         out.append(SimResult(
             fct_slots=fct[sl],
@@ -785,6 +859,11 @@ def _simulate_batch_singlehop(
             delivered_bits=float(delivered_total[b]),
             offered_bits=offered,
         ))
+    if san is not None:
+        rem, completed = credit.remaining_active()
+        injected = sum(r.offered_bits for r in out)
+        san.check_credit_closure(injected, float(delivered_total.sum()),
+                                 rem, completed, label="singlehop:credit")
     return out
 
 
@@ -792,6 +871,7 @@ def _simulate_batch(
     cases: list[tuple[Schedule, Workload]],
     bits_per_slot: float,
     modes: list[str],
+    san=None,
 ) -> list[SimResult]:
     """Advance every (schedule, workload) case in one slot loop with a
     leading batch axis.  Routing modes mix freely: relay state exists only
@@ -806,11 +886,20 @@ def _simulate_batch(
             raise ValueError("all workloads in a batch must share n")
         if sched.n != n:
             raise ValueError("schedule/workload size mismatch")
+        if san is not None:
+            san.check_workload(wl)
+            san.check_schedule(sched)
     horizons = np.array([wl.horizon for _, wl in cases], dtype=np.int64)
     H = int(horizons.max())
 
     # periodic capacity LUT, concatenated over cases
     caps_list = [sched.capacity_per_slot(bits_per_slot) for sched, _ in cases]
+    if san is not None:
+        for b, (sched, _) in enumerate(cases):
+            san.check_caps_dense(
+                caps_list[b], sched.d_hat,
+                bits_per_slot * (1.0 - sched.recfg_frac),
+                label=f"twohop:case{b}:caps")
     ns = np.array([c.shape[0] for c in caps_list], dtype=np.int64)
     offs = np.concatenate([[0], np.cumsum(ns[:-1])])
     caps_flat = np.concatenate(caps_list, axis=0)
@@ -827,13 +916,14 @@ def _simulate_batch(
     f_off, pid, f_size, fct, credit, order, bucket = _concat_flows(
         cases, n, horizons, H)
 
-    voq_flat = np.zeros(B * n * n)
+    voq_flat = np.zeros(B * n * n)   # per-pair VOQ state  # lint: allow-dense
     voq = voq_flat.reshape(B, n, n)
     # relay state only for the two-hop cases: [(b2, at), src, dst] — the
     # offload fill then lands on contiguous rows (the strided drain
     # gather/assign is several times cheaper than a strided fancy +=).
     # RS maintains per-(at, dst) bucket totals so empty buckets are O(1).
-    R3 = np.zeros((len(tmap) * n, n, n)) if two_hop else None
+    # Inherent two-hop state (source attribution for FCTs), not a temporary.
+    R3 = np.zeros((len(tmap) * n, n, n)) if two_hop else None  # lint: allow-dense
     RS = np.zeros((len(tmap) * n, n)) if two_hop else None
     delivered_total = np.zeros(B)
     second_hop_bits = np.zeros(B)
@@ -931,11 +1021,20 @@ def _simulate_batch(
         credit.credit(delivered.reshape(-1), slot)
 
     out = []
+    voq_case = voq.reshape(B, n * n).sum(axis=1)
     for b, (sched, wl) in enumerate(cases):
         sl = slice(f_off[b], f_off[b + 1])
         offered = float(wl.size[wl.arrival < wl.horizon].sum())
-        ideal = wl.horizon * n * sched.d_hat * bits_per_slot
         case_two_hop = modes[b] in ("rotorlb", "vlb")
+        if san is not None:
+            queued = float(voq_case[b])
+            if case_two_hop:
+                b2 = tmap.index(b)
+                queued += float(R3[b2 * n:(b2 + 1) * n].sum())
+            san.check_conservation(
+                offered, float(delivered_total[b]), queued,
+                label=f"twohop:case{b}:conservation")
+        ideal = wl.horizon * n * sched.d_hat * bits_per_slot
         out.append(SimResult(
             fct_slots=fct[sl],
             flow_size=wl.size,
@@ -945,6 +1044,11 @@ def _simulate_batch(
             avg_hops=1.0 + float(second_hop_bits[b])
             / max(float(delivered_total[b]), 1e-9) if case_two_hop else 1.0,
         ))
+    if san is not None:
+        rem, completed = credit.remaining_active()
+        injected = sum(r.offered_bits for r in out)
+        san.check_credit_closure(injected, float(delivered_total.sum()),
+                                 rem, completed, label="twohop:credit")
     return out
 
 
@@ -953,11 +1057,19 @@ def simulate(
     wl: Workload,
     bits_per_slot: float,
     mode: str = "single_hop",
+    sanitize: bool | None = None,
 ) -> SimResult:
-    """Run ``wl`` over ``sched`` for ``wl.horizon`` slots (vectorized)."""
+    """Run ``wl`` over ``sched`` for ``wl.horizon`` slots (vectorized).
+
+    ``sanitize``: run the :mod:`repro.analysis.sanitize` contract checks
+    (default: the ``REPRO_SANITIZE`` env var); results are bit-identical
+    either way.
+    """
+    san = make_sanitizer(sanitize)
     if mode == "single_hop":
-        return _simulate_batch_singlehop([(sched, wl)], bits_per_slot)[0]
-    return _simulate_batch([(sched, wl)], bits_per_slot, [mode])[0]
+        return _simulate_batch_singlehop([(sched, wl)], bits_per_slot,
+                                         san=san)[0]
+    return _simulate_batch([(sched, wl)], bits_per_slot, [mode], san=san)[0]
 
 
 # ---------------------------------------------------------------------------
@@ -987,6 +1099,7 @@ def run_sweep(
     cases: list[SweepCase],
     bits_per_slot: float,
     backend: str = "numpy",
+    sanitize: bool | None = None,
 ) -> list[SweepRow]:
     """Evaluate a grid of simulation cases, batching within engine kind.
 
@@ -1000,9 +1113,14 @@ def run_sweep(
     bits, and avg_hops only; ``fct_slots`` is all-inf (use the NumPy
     backend for FCTs).  The kernels jit once per padded shape signature, so
     repeated same-shape sweeps never recompile.
+
+    ``sanitize``: run the :mod:`repro.analysis.sanitize` contract checks on
+    every batch (default: the ``REPRO_SANITIZE`` env var); results are
+    bit-identical either way.
     """
     if backend not in ("numpy", "jax"):
         raise ValueError(backend)
+    san = make_sanitizer(sanitize)
     groups: dict[tuple, list[int]] = {}
     for i, c in enumerate(cases):
         if c.mode not in _MODES:
@@ -1014,12 +1132,14 @@ def run_sweep(
         modes = [cases[i].mode for i in idxs]
         t0 = time.perf_counter()
         if backend == "jax":
-            results = (_aggregate_batch_jax(batch, bits_per_slot) if single
-                       else _twohop_batch_jax(batch, bits_per_slot, modes))
+            results = (_aggregate_batch_jax(batch, bits_per_slot, san=san)
+                       if single
+                       else _twohop_batch_jax(batch, bits_per_slot, modes,
+                                              san=san))
         elif single:
-            results = _simulate_batch_singlehop(batch, bits_per_slot)
+            results = _simulate_batch_singlehop(batch, bits_per_slot, san=san)
         else:
-            results = _simulate_batch(batch, bits_per_slot, modes)
+            results = _simulate_batch(batch, bits_per_slot, modes, san=san)
         dt = (time.perf_counter() - t0) / len(idxs)
         for i, r in zip(idxs, results):
             rows[i] = SweepRow(label=cases[i].label, mode=cases[i].mode,
@@ -1044,13 +1164,20 @@ class _FabricPlan:
     that slot loses to contention; ``disagreement`` the contested fraction
     of (matching, port) claims (see ``schedule_disagreement``).  A
     consistent fabric (one schedule) has zero loss and zero disagreement
-    and its plans are byte-identical to ``Schedule.slot_circuits``."""
+    and its plans are byte-identical to ``Schedule.slot_circuits``.
+
+    ``contested[s]`` counts slot s's contested traffic-carrying claims
+    (src != dst inputs whose output port at least one other input also
+    claims) — the capacity ``contested * w`` bounds ``lost`` from above
+    for every arbitration policy, which is the disagreement-accounting
+    closure the sanitizer enforces."""
 
     plans: list
     n_slots: int
     disagreement: float
     lost: np.ndarray
     groups: int
+    contested: np.ndarray | None = None
 
 
 def _fabric_plan(
@@ -1094,7 +1221,8 @@ def _fabric_plan(
                  for at, v, cap in sched.slot_circuits(bits_per_slot)]
         return _FabricPlan(plans=plans, n_slots=sched.n_slots,
                            disagreement=0.0,
-                           lost=np.zeros(sched.n_slots), groups=1)
+                           lost=np.zeros(sched.n_slots), groups=1,
+                           contested=np.zeros(sched.n_slots))
 
     base = scheds[0]
     n, T, d_hat, n_slots = base.n, base.T, base.d_hat, base.n_slots
@@ -1141,9 +1269,13 @@ def _fabric_plan(
     plans = [(pid_u[bounds[s]:bounds[s + 1]], cap[bounds[s]:bounds[s + 1]])
              for s in range(n_slots)]
     # same claim counting as schedule_disagreement(scheds, owner), reused
+    contested_n = np.bincount(
+        slot_of, weights=(nonself & contested).sum(axis=1),
+        minlength=n_slots)
     return _FabricPlan(plans=plans, n_slots=n_slots,
                        disagreement=float(contested.mean()),
-                       lost=lost, groups=len(scheds))
+                       lost=lost, groups=len(scheds),
+                       contested=contested_n)
 
 
 def _quantizer_unit(
@@ -1291,7 +1423,8 @@ class AdaptiveRow:
                                     # never disagreed)
 
 
-def _run_adaptive_case(case: AdaptiveCase, bits_per_slot: float) -> AdaptiveRow:
+def _run_adaptive_case(case: AdaptiveCase, bits_per_slot: float,
+                       san=None) -> AdaptiveRow:
     if case.policy not in _POLICIES:
         raise ValueError(case.policy)
     if case.epoch_slots <= 0:
@@ -1312,6 +1445,9 @@ def _run_adaptive_case(case: AdaptiveCase, bits_per_slot: float) -> AdaptiveRow:
     wl, n = case.wl, case.wl.n
     E, H = case.epoch_slots, wl.horizon
     n_epochs = -(-H // E)
+    if san is not None:
+        san.check_workload(wl)
+    san_w = bits_per_slot * (1.0 - case.recfg_frac)
 
     # flow state shared across epochs — a schedule hot-swap never resets it
     pid = (wl.src * n + wl.dst).astype(np.int64)
@@ -1324,8 +1460,9 @@ def _run_adaptive_case(case: AdaptiveCase, bits_per_slot: float) -> AdaptiveRow:
     bucket = np.searchsorted(wl.arrival[order], np.arange(H + 1))
     voq = np.zeros(n * n)
 
-    # true per-epoch offered matrices (oracle policy + estimate-error metric)
-    true_epoch = np.zeros((n_epochs, n, n))
+    # true per-epoch offered matrices (oracle policy + estimate-error
+    # metric); dense by design: the O(n^2) control plane owns these
+    true_epoch = np.zeros((n_epochs, n, n))  # lint: allow-dense
     np.add.at(true_epoch,
               (wl.arrival[order] // E, wl.src[order], wl.dst[order]),
               f_size[order])
@@ -1346,8 +1483,12 @@ def _run_adaptive_case(case: AdaptiveCase, bits_per_slot: float) -> AdaptiveRow:
     last_construction = 0.0
 
     def consistent_plan(sched: Schedule) -> _FabricPlan:
-        return _fabric_plan([sched], np.zeros(n, dtype=np.int64),
-                            bits_per_slot, case.collision)
+        fp = _fabric_plan([sched], np.zeros(n, dtype=np.int64),
+                          bits_per_slot, case.collision)
+        if san is not None:
+            san.check_schedule(sched)
+            san.check_fabric_plan(fp, n, case.d_hat, san_w)
+        return fp
 
     def vsched(m: np.ndarray, seed: int) -> Schedule:
         nonlocal construction_s, last_construction
@@ -1374,7 +1515,12 @@ def _run_adaptive_case(case: AdaptiveCase, bits_per_slot: float) -> AdaptiveRow:
         # complete gather there is exactly one view, so this reduces to
         # the single-schedule charge exactly)
         last_construction = dt / len(scheds)
-        return _fabric_plan(scheds, owner, bits_per_slot, case.collision)
+        fp = _fabric_plan(scheds, owner, bits_per_slot, case.collision)
+        if san is not None:
+            for s in scheds:       # pre-merge: every row a permutation
+                san.check_schedule(s)
+            san.check_fabric_plan(fp, n, case.d_hat, san_w)
+        return fp
 
     if case.policy in ("oracle", "stale"):
         fp = consistent_plan(vsched(oracle_m[0], case.seed))
@@ -1393,6 +1539,7 @@ def _run_adaptive_case(case: AdaptiveCase, bits_per_slot: float) -> AdaptiveRow:
     dark_until = 0                  # circuits dark while switches retarget
     dark_slots = 0
     groups_max = 1
+    injected_cum = 0.0              # sanitizer's running bit ledger
 
     for slot in range(H):
         if pending is not None and slot >= pending[0]:
@@ -1402,11 +1549,20 @@ def _run_adaptive_case(case: AdaptiveCase, bits_per_slot: float) -> AdaptiveRow:
             groups_max = max(groups_max, fp.groups)
         if slot and slot % E == 0:
             epoch = slot // E
+            if san is not None:
+                # per-epoch bit ledger: collision loss and dark windows are
+                # capacity-side, so queued bits close the ledger exactly
+                san.check_conservation(
+                    injected_cum, float(delivered_ep.sum()),
+                    float(voq.sum()),
+                    label=f"adaptive:epoch{epoch - 1}:conservation")
             swap = None
             if case.policy == "adaptive":
                 views = estimate_all_views(
                     counters, fleet, case.k, q_unit,
                     steps=case.gather_steps)
+                if san is not None:
+                    san.check_views(views)
                 t = true_epoch[epoch - 1]
                 masks, owner = views.unique()
                 # estimate error: per-node TV distance vs the epoch truth,
@@ -1462,6 +1618,8 @@ def _run_adaptive_case(case: AdaptiveCase, bits_per_slot: float) -> AdaptiveRow:
             np.add.at(voq, pid[newf], f_size[newf])
             np.add.at(counters, (wl.src[newf], wl.dst[newf]), f_size[newf])
             credit.arrive(newf)
+            if san is not None:
+                injected_cum += float(f_size[newf].sum())
 
         if slot < dark_until:       # reconfiguring: no circuits this slot
             dark_slots += 1         # (dark slots serve nothing, so they
@@ -1478,6 +1636,14 @@ def _run_adaptive_case(case: AdaptiveCase, bits_per_slot: float) -> AdaptiveRow:
         delivered_ep[slot // E] += tx.sum()
         credit.credit_pairs(spid, tx, slot)
 
+    if san is not None:
+        delivered_all = float(delivered_ep.sum())
+        san.check_conservation(injected_cum, delivered_all,
+                               float(voq.sum()),
+                               label="adaptive:final:conservation")
+        rem, completed = credit.remaining_active()
+        san.check_credit_closure(injected_cum, delivered_all, rem,
+                                 completed, label="adaptive:credit")
     ep_len = np.minimum(E, H - E * np.arange(n_epochs))
     ep_cap = ep_len * n * case.d_hat * bits_per_slot
     ideal = H * n * case.d_hat * bits_per_slot
@@ -1501,7 +1667,8 @@ def _run_adaptive_case(case: AdaptiveCase, bits_per_slot: float) -> AdaptiveRow:
 
 
 def run_adaptive(
-    cases: list[AdaptiveCase], bits_per_slot: float
+    cases: list[AdaptiveCase], bits_per_slot: float,
+    sanitize: bool | None = None,
 ) -> list[AdaptiveRow]:
     """Closed-loop epoch-driven simulation of each case (see
     :class:`AdaptiveCase`); results come back in input order.
@@ -1518,11 +1685,17 @@ def run_adaptive(
     :class:`AdaptiveCase` — ``gather_steps``, ``collision``) and the rows
     report per-epoch disagreement and collision-loss alongside
     utilization.
+
+    ``sanitize``: run the :mod:`repro.analysis.sanitize` contract checks —
+    per-epoch bit conservation, fabric-plan validity, disagreement closure
+    — on every case (default: the ``REPRO_SANITIZE`` env var); results are
+    bit-identical either way.
     """
+    san = make_sanitizer(sanitize)
     rows = []
     for case in cases:
         t0 = time.perf_counter()
-        row = _run_adaptive_case(case, bits_per_slot)
+        row = _run_adaptive_case(case, bits_per_slot, san=san)
         row.sim_s = time.perf_counter() - t0
         rows.append(row)
     return rows
@@ -1569,6 +1742,11 @@ def _jax_fns() -> dict:
     import jax
     import jax.numpy as jnp
 
+    # Kernels return their final carry alongside the per-slot outputs so
+    # the sanitizer can close the bit ledger (injected = delivered +
+    # queued) without re-running anything; the carry is aggregate VOQ /
+    # relay state the scan holds anyway.
+
     def agg(caps_flat, cap_idx, arr, live):
         _JAX_TRACES["agg"] += 1
         B, n = arr.shape[1], arr.shape[2]
@@ -1580,9 +1758,11 @@ def _jax_fns() -> dict:
             tx = jnp.minimum(voq, cap)
             return voq - tx, tx.sum(axis=(1, 2))
 
-        _, delivered = jax.lax.scan(
-            step, jnp.zeros((B, n, n), jnp.float32), (cap_idx, arr, live))
-        return delivered
+        voq_f, delivered = jax.lax.scan(
+            step,
+            jnp.zeros((B, n, n), jnp.float32),  # lint: allow-dense
+            (cap_idx, arr, live))
+        return delivered, voq_f
 
     # Both two-hop kernels carry relay state as per-(at, dst) bucket
     # TOTALS only (the NumPy engine's maintained RS array, without the
@@ -1626,7 +1806,9 @@ def _jax_fns() -> dict:
                            0.0)
             qs = jnp.where(queue[:, :, None] > _JEPS,
                            voq / jnp.maximum(queue, _JEPS)[:, :, None], 0.0)
-            mvd = jnp.einsum("buv,bud->bvd", send_u[:, :, None] * ls, qs)
+            # dense-by-design small-n kernel (see _TWOHOP_DENSE_MAX_N)
+            mvd = jnp.einsum(  # lint: allow-dense
+                "buv,bud->bvd", send_u[:, :, None] * ls, qs)
             voq = jnp.maximum(voq - send_u[:, :, None] * qs, 0.0)
             # bits whose relay node IS the destination arrive at once
             diag = jnp.diagonal(mvd, axis1=1, axis2=2)     # mvd[b, v, v]
@@ -1635,12 +1817,12 @@ def _jax_fns() -> dict:
             RS = RS + mvd
             return (voq, RS), (deliv, second)
 
-        _, out = jax.lax.scan(
+        carry, out = jax.lax.scan(
             step,
-            (jnp.zeros((B, n, n), jnp.float32),
-             jnp.zeros((B, n, n), jnp.float32)),
+            (jnp.zeros((B, n, n), jnp.float32),   # lint: allow-dense
+             jnp.zeros((B, n, n), jnp.float32)),  # lint: allow-dense
             (cap_idx, apos, asz, live))
-        return out
+        return out, carry
 
     def twohop_sparse(caps_flat, cap_idx, apos, asz, live, plan_idx,
                       p_row, p_v, p_b, p_valid, direct):
@@ -1698,12 +1880,12 @@ def _jax_fns() -> dict:
             RS = RS.at[bv, :].add(moved)         # -> bucket [(b, at v), dst]
             return (voq3.reshape(B, n, n), RS), (deliv, second)
 
-        _, out = jax.lax.scan(
+        carry, out = jax.lax.scan(
             step,
-            (jnp.zeros((B, n, n), jnp.float32),
+            (jnp.zeros((B, n, n), jnp.float32),  # lint: allow-dense
              jnp.zeros((B * n, n), jnp.float32)),
             (cap_idx, apos, asz, live, plan_idx))
-        return out
+        return out, carry
 
     _JAX_FNS.update(
         agg=jax.jit(agg),
@@ -1794,8 +1976,31 @@ def _jax_results(
     return out
 
 
+def _sanitize_jax_batch(
+    san, cases, caps_list, bits_per_slot, results,
+    voq_f: np.ndarray, relay_queued: np.ndarray | None = None,
+) -> None:
+    """Shared post-run sanitizer pass for the jax engines: entry contracts
+    plus per-case float32 bit conservation from the kernels' final carry."""
+    n = cases[0][1].n
+    for b, (sched, wl) in enumerate(cases):
+        san.check_workload(wl)
+        san.check_schedule(sched)
+        san.check_caps_dense(
+            caps_list[b], sched.d_hat,
+            bits_per_slot * (1.0 - sched.recfg_frac),
+            label=f"jax:case{b}:caps")
+        queued = float(voq_f[b].sum())
+        if relay_queued is not None:
+            queued += float(relay_queued[b])
+        san.check_conservation(
+            results[b].offered_bits, results[b].delivered_bits, queued,
+            label=f"jax:case{b}:conservation", float32=True)
+
+
 def _aggregate_batch_jax(
-    cases: list[tuple[Schedule, Workload]], bits_per_slot: float
+    cases: list[tuple[Schedule, Workload]], bits_per_slot: float,
+    san=None,
 ) -> list[SimResult]:
     """Single-hop aggregate dynamics for a batch via a jitted
     ``jax.lax.scan`` (compile cache shared with the two-hop kernels).
@@ -1806,17 +2011,21 @@ def _aggregate_batch_jax(
     fns = _jax_fns()
     B = len(cases)
     n = cases[0][1].n
-    _, caps_flat, cap_idx, apos, asz, live, H = _jax_batch_inputs(
+    caps_list, caps_flat, cap_idx, apos, asz, live, H = _jax_batch_inputs(
         cases, bits_per_slot)
     # aggregate dynamics are dense anyway: scatter the padded arrival
     # lists into the (H_pad, B, n, n) per-slot arrival tensor
     H_pad, K = asz.shape
-    arr = np.zeros((H_pad, B, n, n), dtype=np.float32)
+    arr = np.zeros((H_pad, B, n, n), dtype=np.float32)  # lint: allow-dense
     np.add.at(arr, (np.repeat(np.arange(H_pad), K),
                     apos[:, :, 0].ravel(), apos[:, :, 1].ravel(),
                     apos[:, :, 2].ravel()), asz.ravel())
-    delivered = fns["agg"](caps_flat, cap_idx, arr, live)
-    return _jax_results(cases, delivered, None, bits_per_slot)
+    delivered, voq_f = fns["agg"](caps_flat, cap_idx, arr, live)
+    results = _jax_results(cases, delivered, None, bits_per_slot)
+    if san is not None:
+        _sanitize_jax_batch(san, cases, caps_list, bits_per_slot, results,
+                            np.asarray(voq_f, np.float64))
+    return results
 
 
 def _twohop_batch_jax(
@@ -1824,6 +2033,7 @@ def _twohop_batch_jax(
     bits_per_slot: float,
     modes: list[str],
     kernel: str | None = None,
+    san=None,
 ) -> list[SimResult]:
     """Two-hop (rotorlb / vlb, mixed freely) relay dynamics for a batch via
     a jitted ``jax.lax.scan`` — the accelerated counterpart of
@@ -1849,7 +2059,7 @@ def _twohop_batch_jax(
     if kernel is None:
         kernel = "dense" if n <= _TWOHOP_DENSE_MAX_N else "sparse"
     if kernel == "dense":
-        delivered, second = fns["twohop_dense"](
+        (delivered, second), (voq_f, rs_f) = fns["twohop_dense"](
             caps_flat, cap_idx, apos, asz, live, direct)
     elif kernel == "sparse":
         plans = _SupportPlans(caps_list, n, list(range(B)), B)
@@ -1879,39 +2089,44 @@ def _twohop_batch_jax(
             p_v[i, :j] = p["v"]
             p_b[i, :j] = p["b"]
             p_valid[i, :j] = True
-        delivered, second = fns["twohop_sparse"](
+        (delivered, second), (voq_f, rs_f) = fns["twohop_sparse"](
             caps_flat, cap_idx, apos, asz, live, plan_idx,
             p_row, p_v, p_b, p_valid, direct)
     else:
         raise ValueError(kernel)
-    return _jax_results(cases, delivered, second, bits_per_slot, modes)
+    results = _jax_results(cases, delivered, second, bits_per_slot, modes)
+    if san is not None:
+        relay_queued = np.asarray(rs_f, np.float64).reshape(
+            B, -1).sum(axis=1)
+        _sanitize_jax_batch(san, cases, caps_list, bits_per_slot, results,
+                            np.asarray(voq_f, np.float64), relay_queued)
+    return results
 
 
 def simulate_aggregate_jax(
     sched: Schedule, arrivals: np.ndarray, bits_per_slot: float
 ):
-    """Single-hop aggregate dynamics on the accelerator: a lax.scan over
-    slots with VOQ state. Returns (delivered_per_slot, final_voq).
+    """Single-hop aggregate dynamics on the accelerator.
+    Returns (delivered_per_slot, final_voq).
 
     ``arrivals``: (horizon, n, n) bits arriving per slot.
+
+    Runs as a B = 1 batch through the module's cached ``agg`` scan kernel
+    (horizon padded to the ``_PAD_H`` bucket with dead slots — exact
+    no-ops), so repeated calls at the same padded shape never retrace;
+    the PR 4 compile-cache discipline applies here too.
     """
-    import jax
-    import jax.numpy as jnp
-
-    caps = jnp.asarray(sched.capacity_per_slot(bits_per_slot), jnp.float32)
-    ns = caps.shape[0]
-    arrivals = jnp.asarray(arrivals, jnp.float32)
-    horizon = arrivals.shape[0]
-
-    def step(voq, inp):
-        slot, arr = inp
-        voq = voq + arr
-        cap = caps[slot % ns]
-        tx = jnp.minimum(voq, cap)
-        return voq - tx, tx.sum()
-
-    voq_f, delivered = jax.lax.scan(
-        step, jnp.zeros(arrivals.shape[1:], jnp.float32),
-        (jnp.arange(horizon), arrivals),
-    )
-    return np.asarray(delivered), np.asarray(voq_f)
+    fns = _jax_fns()
+    arrivals = np.asarray(arrivals, dtype=np.float32)
+    horizon, n = arrivals.shape[0], arrivals.shape[1]
+    caps_flat = sched.capacity_per_slot(bits_per_slot).astype(np.float32)
+    ns = caps_flat.shape[0]
+    H_pad = _pad_to(horizon, _PAD_H)
+    cap_idx = np.zeros((H_pad, 1), dtype=np.int32)
+    cap_idx[:horizon, 0] = np.arange(horizon) % ns
+    live = np.zeros((H_pad, 1), dtype=np.float32)
+    live[:horizon, 0] = 1.0
+    arr = np.zeros((H_pad, 1, n, n), dtype=np.float32)  # lint: allow-dense
+    arr[:horizon, 0] = arrivals
+    delivered, voq_f = fns["agg"](caps_flat, cap_idx, arr, live)
+    return np.asarray(delivered)[:horizon, 0], np.asarray(voq_f)[0]

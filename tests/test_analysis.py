@@ -1,0 +1,332 @@
+"""repro.analysis: lint rules R1-R4, baseline freeze, and the runtime
+sanitizer (golden identity + seeded-corruption detection)."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.analysis.lint import (
+    apply_baseline,
+    lint_file,
+    load_baseline,
+    main as lint_main,
+    write_baseline,
+)
+from repro.analysis.sanitize import SanitizeError, Sanitizer, sanitize_enabled
+from repro.core.schedule import vermilion_schedule
+from repro.core.simulator import (
+    SweepCase,
+    run_adaptive,
+    run_sweep,
+    simulate,
+    simulate_reference,
+    websearch_workload,
+    AdaptiveCase,
+)
+
+BPS = 112500.0
+RECFG = 1.0 / 9.0
+
+HOT = "src/repro/core/simulator.py"     # hot-path module (R1 applies)
+COLD = "src/repro/plots/figures.py"     # non-hot module (R1 silent)
+TESTF = "tests/test_something.py"       # test module (R3 applies)
+
+
+def rules(path, source):
+    return sorted({v.rule for v in lint_file(path, source=source)})
+
+
+# ---------------------------------------------------------------------------
+# R1: dense (n, n)-per-slot allocation on hot-path modules
+# ---------------------------------------------------------------------------
+
+def test_r1_dense_tuple_alloc_flagged_on_hot_path():
+    src = "import numpy as np\na = np.zeros((n_slots, n, n))\n"
+    assert "R1" in rules(HOT, src)
+    assert "R1" not in rules(COLD, src)
+
+
+def test_r1_flat_product_alloc_flagged():
+    src = "import numpy as np\nv = np.zeros(B * n * n)\n"
+    assert "R1" in rules(HOT, src)
+
+
+def test_r1_dense_einsum_flagged():
+    src = ('import jax.numpy as jnp\n'
+           'm = jnp.einsum("buv,bud->bvd", a, b)\n')
+    assert "R1" in rules(HOT, src)
+
+
+def test_r1_escape_hatch():
+    src = ("import numpy as np\n"
+           "a = np.zeros((n_slots, n, n))  # lint: allow-dense\n")
+    assert "R1" not in rules(HOT, src)
+
+
+def test_r1_small_allocs_pass():
+    src = ("import numpy as np\n"
+           "a = np.zeros((n, n))\n"           # 2-D: fine
+           "b = np.zeros((4, 8, 8))\n"        # no fabric dims
+           "c = np.zeros(n)\n")
+    assert "R1" not in rules(HOT, src)
+
+
+# ---------------------------------------------------------------------------
+# R2: jit hygiene
+# ---------------------------------------------------------------------------
+
+def test_r2_unjitted_scan_flagged():
+    src = ("import jax\n"
+           "def f(c, xs):\n"
+           "    return jax.lax.scan(step, c, xs)\n")
+    assert "R2" in rules(HOT, src)
+
+
+def test_r2_scan_under_jit_call_passes():
+    src = ("import jax\n"
+           "def f(c, xs):\n"
+           "    return jax.lax.scan(step, c, xs)\n"
+           "g = jax.jit(f)\n")
+    assert "R2" not in rules(HOT, src)
+
+
+def test_r2_scan_under_jit_decorator_passes():
+    src = ("import jax\n"
+           "@jax.jit\n"
+           "def f(c, xs):\n"
+           "    return jax.lax.scan(step, c, xs)\n")
+    assert "R2" not in rules(HOT, src)
+
+
+def test_r2_jit_inside_loop_flagged():
+    src = ("import jax\n"
+           "for k in ks:\n"
+           "    fn = jax.jit(make(k))\n")
+    assert "R2" in rules(HOT, src)
+
+
+def test_r2_jit_of_lambda_flagged():
+    src = "import jax\nf = jax.jit(lambda x: x + 1)\n"
+    assert "R2" in rules(HOT, src)
+
+
+def test_r2_traced_branch_flagged():
+    src = ("import jax\nimport jax.numpy as jnp\n"
+           "@jax.jit\n"
+           "def f(x):\n"
+           "    if jnp.sum(x) > 0:\n"
+           "        return x\n"
+           "    return -x\n")
+    assert "R2" in rules(HOT, src)
+
+
+# ---------------------------------------------------------------------------
+# R3: jax imports in tests/ need pytest.importorskip
+# ---------------------------------------------------------------------------
+
+def test_r3_unguarded_import_flagged():
+    src = "import jax\n"
+    assert "R3" in rules(TESTF, src)
+    assert "R3" not in rules(HOT, src)      # src modules are exempt
+
+
+def test_r3_module_guard_passes():
+    src = ('import pytest\n'
+           'pytest.importorskip("jax")\n'
+           'import jax\nimport jax.numpy as jnp\n')
+    assert "R3" not in rules(TESTF, src)
+
+
+def test_r3_function_level_guard_passes():
+    src = ('import pytest\n'
+           'def test_x():\n'
+           '    pytest.importorskip("jax")\n'
+           '    import jax\n')
+    assert "R3" not in rules(TESTF, src)
+
+
+# ---------------------------------------------------------------------------
+# R4: dtype discipline
+# ---------------------------------------------------------------------------
+
+def test_r4_implicit_dtype_flagged():
+    src = "import jax.numpy as jnp\na = jnp.zeros((2, 2))\n"
+    assert "R4" in rules(HOT, src)
+
+
+def test_r4_explicit_dtype_passes():
+    src = "import jax.numpy as jnp\na = jnp.zeros((2, 2), jnp.float32)\n"
+    assert "R4" not in rules(HOT, src)
+
+
+def test_r4_uint16_wrap_arithmetic_flagged():
+    src = "import numpy as np\ny = x.astype(np.uint16) + 1\n"
+    assert "R4" in rules(HOT, src)
+
+
+# ---------------------------------------------------------------------------
+# Baseline freeze
+# ---------------------------------------------------------------------------
+
+def _mk_violations():
+    return lint_file(COLD, source="import jax.numpy as jnp\n"
+                                  "a = jnp.zeros((2, 2))\n"
+                                  "b = jnp.ones((3,))\n")
+
+
+def test_baseline_roundtrip_and_budget(tmp_path):
+    vs = _mk_violations()
+    assert len(vs) == 2
+    bl_path = str(tmp_path / "baseline.json")
+    write_baseline(vs, bl_path)
+    bl = load_baseline(bl_path)
+
+    fresh, suppressed = apply_baseline(vs, bl)
+    assert fresh == [] and suppressed == 2
+
+    # a *new* violation (not in the baseline) stays visible
+    vs2 = vs + lint_file(COLD, source="import jax.numpy as jnp\n"
+                                      "c = jnp.full((4,), 0.0)\n")
+    fresh, suppressed = apply_baseline(vs2, bl)
+    assert suppressed == 2 and len(fresh) == 1 and "full" in fresh[0].snippet
+
+    # a budget of count=1 absorbs exactly one duplicate
+    dup = vs[:1] * 3
+    fresh, suppressed = apply_baseline(dup, bl)
+    assert suppressed == 1 and len(fresh) == 2
+
+
+def test_lint_main_exit_codes(tmp_path):
+    clean = tmp_path / "ok.py"
+    clean.write_text("x = 1\n")
+    dirty = tmp_path / "bad.py"
+    dirty.write_text("import jax.numpy as jnp\na = jnp.zeros((2, 2))\n")
+
+    assert lint_main([str(clean), "--no-baseline"]) == 0
+    assert lint_main([str(dirty), "--no-baseline"]) == 1
+
+    # a baseline that freezes core/ violations is itself an error (exit 2)
+    bad_bl = tmp_path / "bl.json"
+    bad_bl.write_text(json.dumps({"version": 1, "entries": [
+        {"file": "src/repro/core/simulator.py", "rule": "R1",
+         "snippet": "x", "count": 1}]}))
+    assert lint_main([str(clean), "--baseline", str(bad_bl)]) == 2
+
+
+def test_checked_in_baseline_has_no_core_entries():
+    from repro.analysis.lint import DEFAULT_BASELINE
+    bl = load_baseline(DEFAULT_BASELINE)
+    core = [e for e in bl["entries"]
+            if e["file"].startswith("src/repro/core")]
+    assert core == [], core
+
+
+# ---------------------------------------------------------------------------
+# Sanitizer: activation
+# ---------------------------------------------------------------------------
+
+def test_sanitize_enabled_resolution(monkeypatch):
+    monkeypatch.delenv("REPRO_SANITIZE", raising=False)
+    assert sanitize_enabled() is False
+    assert sanitize_enabled(True) is True
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    assert sanitize_enabled() is True
+    assert sanitize_enabled(False) is False     # explicit beats env
+    monkeypatch.setenv("REPRO_SANITIZE", "off")
+    assert sanitize_enabled() is False
+
+
+# ---------------------------------------------------------------------------
+# Sanitizer: golden identity (sanitize=True is bit-identical) + coverage
+# ---------------------------------------------------------------------------
+
+def _small(n=6, horizon=120, seed=1):
+    wl = websearch_workload(n, 0.3, horizon, BPS, d_hat=2, seed=seed)
+    s = vermilion_schedule(wl.demand_matrix(), k=3, d_hat=2,
+                           recfg_frac=RECFG)
+    return wl, s
+
+
+def _same(a, b):
+    assert a.delivered_bits == b.delivered_bits
+    assert np.array_equal(np.asarray(a.fct_slots), np.asarray(b.fct_slots))
+
+
+@pytest.mark.parametrize("mode", ["single_hop", "rotorlb", "vlb"])
+def test_golden_identity_numpy(mode):
+    wl, s = _small()
+    _same(simulate(s, wl, BPS, mode=mode, sanitize=False),
+          simulate(s, wl, BPS, mode=mode, sanitize=True))
+
+
+def test_golden_identity_reference():
+    wl, s = _small()
+    _same(simulate_reference(s, wl, BPS, sanitize=False),
+          simulate_reference(s, wl, BPS, sanitize=True))
+
+
+def test_golden_identity_jax_backend():
+    pytest.importorskip("jax")
+    wl, s = _small()
+    cases = [SweepCase(s, wl, "single_hop", "sh"),
+             SweepCase(s, wl, "rotorlb", "rl")]
+    for a, b in zip(run_sweep(cases, BPS, backend="jax", sanitize=False),
+                    run_sweep(cases, BPS, backend="jax", sanitize=True)):
+        _same(a.result, b.result)
+
+
+def test_golden_identity_adaptive():
+    wl, _ = _small(horizon=180)
+    cases = [AdaptiveCase(wl=wl, epoch_slots=60, policy="adaptive", d_hat=2),
+             AdaptiveCase(wl=wl, epoch_slots=60, policy="adaptive", d_hat=2,
+                          gather_steps=3, collision="lowest")]
+    for a, b in zip(run_adaptive(cases, BPS, sanitize=False),
+                    run_adaptive(cases, BPS, sanitize=True)):
+        _same(a.result, b.result)
+
+
+def test_sanitizer_counts_cover_contracts():
+    from repro.core.simulator import _simulate_batch_singlehop
+    wl, s = _small()
+    san = Sanitizer()
+    _simulate_batch_singlehop([(s, wl)], BPS, san=san)
+    for key in ("workload", "schedule", "support", "conservation", "credit"):
+        assert san.counts.get(key, 0) > 0, (key, san.counts)
+
+
+# ---------------------------------------------------------------------------
+# Sanitizer: seeded corruptions are caught (and silent without it)
+# ---------------------------------------------------------------------------
+
+def test_double_claimed_output_port_caught():
+    wl, s = _small()
+    s.perms[0, :] = 0      # every input port claims output 0 (+ self-loop)
+    # silently tolerated without the sanitizer:
+    simulate(s, wl, BPS, sanitize=False)
+    with pytest.raises(SanitizeError, match="sanitize:schedule"):
+        simulate(s, wl, BPS, sanitize=True)
+
+
+def test_dropped_credit_caught(monkeypatch):
+    from repro.core import simulator as sim
+    orig = sim._CreditState.credit_pairs
+
+    def half_credit(self, pids, s, slot):
+        return orig(self, pids, np.asarray(s) * 0.5, slot)
+
+    monkeypatch.setattr(sim._CreditState, "credit_pairs", half_credit)
+    wl, s = _small()
+    # silently tolerated without the sanitizer:
+    simulate(s, wl, BPS, sanitize=False)
+    with pytest.raises(SanitizeError, match="credit does not close"):
+        simulate(s, wl, BPS, sanitize=True)
+
+
+def test_env_var_activates_checks(monkeypatch):
+    wl, s = _small()
+    s.perms[0, :] = 0
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    with pytest.raises(SanitizeError):
+        simulate(s, wl, BPS)
+    monkeypatch.setenv("REPRO_SANITIZE", "0")
+    simulate(s, wl, BPS)   # env off: no checks, no raise

@@ -1,9 +1,11 @@
 """Checkpointing: roundtrip, atomicity, keep-N, LATEST pointer, async."""
 import os
 
-import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("jax")
+import jax.numpy as jnp
 
 from repro.ckpt import checkpoint as ck
 
@@ -12,7 +14,8 @@ def tree():
     return {
         "a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
         "nested": {"b": jnp.ones((4,), jnp.bfloat16),
-                   "c": [jnp.zeros((2, 2)), jnp.full((1,), 7.0)]},
+                   "c": [jnp.zeros((2, 2), jnp.float32),
+                         jnp.full((1,), 7.0, jnp.float32)]},
     }
 
 
@@ -48,7 +51,7 @@ def test_shape_mismatch_raises(tmp_path):
     t = tree()
     ck.save(t, str(tmp_path), step=1)
     bad = dict(t)
-    bad["a"] = jnp.zeros((5, 5))
+    bad["a"] = jnp.zeros((5, 5), jnp.float32)
     with pytest.raises(ValueError):
         ck.restore(bad, str(tmp_path))
 

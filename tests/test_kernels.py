@@ -3,10 +3,12 @@
 Tolerances: fp32 kernels differ from the oracles only by reduction order;
 bf16 inputs get looser bounds.
 """
-import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("jax")
+import jax
+import jax.numpy as jnp
 
 from repro.kernels.decode_attention.decode_attention import decode_attention
 from repro.kernels.decode_attention.ref import decode_attention_ref

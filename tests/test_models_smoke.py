@@ -1,9 +1,11 @@
 """Per-architecture smoke tests: reduced configs, one forward/train step on
 CPU, asserting output shapes and no NaNs; plus a decode-step parity check."""
-import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("jax")
+import jax
+import jax.numpy as jnp
 
 from repro.configs import SMOKE, get_config, shape_cells
 from repro.models import decode_step, init_params, loss_fn, prefill
@@ -60,7 +62,7 @@ def test_decode_matches_teacher_forcing(arch):
     if cfg.family == "vlm":
         h, _ = T.forward(params, cfg, tokens,
                          vision_embeds=jnp.zeros((b, cfg.n_vision_tokens,
-                                                  cfg.d_model)))
+                                                  cfg.d_model), jnp.float32))
     else:
         h, _ = T.forward(params, cfg, tokens)
     full_logits = T.logits_fn(params, cfg, h)

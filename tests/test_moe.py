@@ -1,8 +1,10 @@
 """Grouped MoE dispatch: capacity semantics, conservation, grouping."""
-import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("jax")
+import jax
+import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.models.moe import _num_groups, init_moe, moe_ffn
@@ -43,7 +45,7 @@ def test_moe_zero_capacity_drops_gracefully():
 def test_moe_gate_normalization(setup):
     """Routing a single token: output is a convex combination -> bounded."""
     cfg, p = setup
-    x = jnp.ones((1, 1, cfg.d_model)) * 0.1
+    x = jnp.ones((1, 1, cfg.d_model), jnp.float32) * 0.1
     out, _ = moe_ffn(p, x, cfg)
     assert np.isfinite(np.asarray(out)).all()
 

@@ -1,8 +1,10 @@
 """Serving engine: continuous batching, lane isolation, generation parity."""
-import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("jax")
+import jax
+import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.models import greedy_generate, init_params
@@ -19,7 +21,8 @@ def setup():
 def test_single_request_matches_greedy(setup):
     cfg, params = setup
     prompt = np.arange(1, 9, dtype=np.int32)
-    want = greedy_generate(params, cfg, jnp.asarray(prompt)[None, :],
+    want = greedy_generate(params, cfg,
+                           jnp.asarray(prompt, jnp.int32)[None, :],
                            steps=6, max_len=64)
     eng = ServeEngine(params, cfg, n_lanes=2, max_len=64)
     req = Request(rid=0, prompt=prompt, max_new_tokens=6)

@@ -243,12 +243,11 @@ def test_twohop_jax_mixed_horizons():
         _assert_jax_parity(a.result, b.result)
 
 
-def test_jax_backend_no_retrace():
+def test_jax_backend_no_retrace(assert_no_retrace):
     """Repeated same-shape sweeps reuse the compiled kernels: the scan
     bodies must not re-trace (the PR 3 aggregate engine re-traced every
     call)."""
     pytest.importorskip("jax")
-    from repro.core.simulator import _JAX_TRACES
     wl = websearch_workload(7, 0.4, 150, BPS, d_hat=2, seed=4)
     sv = vermilion_schedule(wl.demand_matrix(), k=3, d_hat=2,
                             recfg_frac=RECFG)
@@ -257,10 +256,37 @@ def test_jax_backend_no_retrace():
              SweepCase(so, wl, "rotorlb", "r"),
              SweepCase(so, wl, "vlb", "l")]
     run_sweep(cases, BPS, backend="jax")          # compile (or cache hit)
-    before = dict(_JAX_TRACES)
-    for _ in range(3):
-        run_sweep(cases, BPS, backend="jax")
-    assert _JAX_TRACES == before, (before, _JAX_TRACES)
+    with assert_no_retrace():
+        for _ in range(3):
+            run_sweep(cases, BPS, backend="jax")
+
+
+def test_jax_aggregate_entrypoint_no_retrace(assert_no_retrace):
+    """``simulate_aggregate_jax`` rides the same compile cache as the
+    batched sweep (it used to build a fresh un-jitted scan per call)."""
+    pytest.importorskip("jax")
+    wl = websearch_workload(7, 0.4, 150, BPS, d_hat=2, seed=4)
+    s = vermilion_schedule(wl.demand_matrix(), k=3, d_hat=2,
+                           recfg_frac=RECFG)
+    arr = wl.arrival_matrix()
+    simulate_aggregate_jax(s, arr, BPS)           # compile (or cache hit)
+    with assert_no_retrace(kernels=("agg",)):
+        for _ in range(3):
+            simulate_aggregate_jax(s, arr, BPS)
+
+
+def test_jax_twohop_kernels_no_retrace(assert_no_retrace):
+    """Dense and sparse two-hop relay kernels are pinned separately."""
+    pytest.importorskip("jax")
+    from repro.core.simulator import _twohop_batch_jax
+    wl = websearch_workload(7, 0.4, 150, BPS, d_hat=2, seed=4)
+    so = oblivious_schedule(7, d_hat=2, recfg_frac=RECFG)
+    batch = [(so, wl)]
+    for kernel in ("dense", "sparse"):
+        _twohop_batch_jax(batch, BPS, ["rotorlb"], kernel=kernel)
+        with assert_no_retrace(kernels=(f"twohop_{kernel}",)):
+            for _ in range(3):
+                _twohop_batch_jax(batch, BPS, ["rotorlb"], kernel=kernel)
 
 
 def test_completed_frac_monotone_in_capacity():

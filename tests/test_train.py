@@ -1,10 +1,12 @@
 """Training substrate: optimizer, compression, fault tolerance, elasticity."""
 import os
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("jax")
+import jax
+import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.configs.base import TrainConfig
@@ -27,7 +29,7 @@ from repro.train.compression import (
 
 def test_adamw_reduces_quadratic():
     opt = AdamW(lr=0.1, weight_decay=0.0)
-    params = {"w": jnp.array([3.0, -2.0])}
+    params = {"w": jnp.array([3.0, -2.0], jnp.float32)}
     state = opt.init(params)
     for _ in range(200):
         grads = {"w": 2 * params["w"]}
@@ -45,9 +47,10 @@ def test_cosine_schedule_shape():
 
 def test_grad_clip():
     opt = AdamW(lr=0.0, grad_clip=1.0)
-    params = {"w": jnp.zeros(4)}
+    params = {"w": jnp.zeros(4, jnp.float32)}
     state = opt.init(params)
-    _, state = opt.update({"w": jnp.full(4, 100.0)}, state, params)
+    _, state = opt.update({"w": jnp.full(4, 100.0, jnp.float32)},
+                          state, params)
     assert float(global_norm(state.mu)) <= (1 - opt.b1) * 1.0 + 1e-5
 
 
