@@ -14,8 +14,10 @@ Persists the perf trajectory for cross-PR tracking:
     (per-stage breakdown + hk/euler end-to-end speedup)
   - results/BENCH_adaptive.json — closed-loop utilization, with and
     without construction charging, the epoch-length x
-    reconfiguration-penalty tradeoff grid, and the gather-staleness ->
-    schedule-disagreement -> utilization sweep
+    reconfiguration-penalty tradeoff grid, the gather-staleness ->
+    schedule-disagreement -> utilization sweep, and the fault-injection
+    recovery sweep (fault type x severity x policy, with per-epoch
+    utilization recovery curves)
   - results/BENCH_twohop.json — two-hop relay engine wall-clock per
     (n, mode, backend), numpy vs jax (min-of-N)
 """
@@ -43,6 +45,13 @@ def _adaptive_row_json(row) -> dict:
         "mean_collision_loss": float(row.epoch_collision_loss.mean()),
         "collision_lost_bits": row.collision_lost_bits,
         "schedule_groups_max": row.schedule_groups_max,
+        "fault_lost_bits": row.fault_lost_bits,
+        "fault_refused_bits": row.fault_refused_bits,
+        "dark_plane_slots": row.dark_plane_slots,
+        "excised_nodes": row.excised_nodes,
+        "excised_planes": row.excised_planes,
+        "epoch_utilization": [round(float(u), 6)
+                              for u in row.epoch_utilization],
         "sim_s": row.sim_s,
         "meta": row.meta,
     }
@@ -66,7 +75,7 @@ def main() -> None:
     sys.stdout.flush()
 
     (adaptive_rows, charged_rows, tradeoff_rows,
-     disagreement_rows) = adaptive_bench.main([])
+     disagreement_rows, fault_rows) = adaptive_bench.main([])
     sys.stdout.flush()
 
     twohop_rows = fct_bench.twohop_table()
@@ -85,6 +94,7 @@ def main() -> None:
         "charged": [_adaptive_row_json(r) for r in charged_rows],
         "epoch_tradeoff": [_adaptive_row_json(r) for r in tradeoff_rows],
         "disagreement": [_adaptive_row_json(r) for r in disagreement_rows],
+        "faults": [_adaptive_row_json(r) for r in fault_rows],
     }, indent=2) + "\n")
     (RESULTS / "BENCH_twohop.json").write_text(
         json.dumps(twohop_rows, indent=2) + "\n")

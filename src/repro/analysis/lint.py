@@ -78,6 +78,7 @@ HOT_PATH_MODULES = (
     "repro/core/schedule.py",
     "repro/core/estimation.py",
     "repro/core/matching.py",
+    "repro/core/faults.py",
 )
 
 _ALLOC_FNS = frozenset({"zeros", "ones", "empty", "full"})

@@ -9,10 +9,16 @@ bit-identical to an unsanitized one (pinned in tests/test_analysis.py).
 Contracts (the invariants PRs 1-5 established by hand):
 
 * **Bit conservation** — injected bits = delivered + still-queued (VOQ +
-  relay buckets).  Collision loss and reconfiguration-dark windows are
-  *capacity*-side losses in this simulator: the un-served bits stay queued,
-  so the bit ledger closes without them (their capacity accounting has its
-  own closure check below).
+  relay buckets) + fault-stranded.  Collision loss and reconfiguration-dark
+  windows are *capacity*-side losses in this simulator: the un-served bits
+  stay queued, so the bit ledger closes without them (their capacity
+  accounting has its own closure check below).  Abrupt faults
+  (``tor_fail``) are the one *bits*-side loss: the engines flush the dead
+  node's VOQs into an explicit ``fault_lost_bits`` ledger, passed here as
+  ``fault_lost`` so the invariant still closes under every fault scenario
+  (bits refused at a drained/dead ingress are never injected at all and
+  carry their own ``fault_refused_bits`` counter — not part of this
+  ledger).
 * **Schedule validity** — every ``Schedule.perms`` row is a permutation
   (the schedule's rate matrix is doubly stochastic; dropping self-loops
   makes the served support doubly *sub*stochastic), and every installed
@@ -216,16 +222,21 @@ class Sanitizer:
         matching, loss accounting nonnegative and — when the plan carries
         per-slot contested-claim counts — closed: ``lost[s]`` can never
         exceed the capacity of slot s's contested traffic-carrying claims
-        (arbitration recovers claims, it never invents loss)."""
+        (arbitration recovers claims, it never invents loss).  Dynamic
+        plans (``fp.plans is None`` — queue-aware arbitration resolves
+        winners per served slot) skip the per-slot support checks; the
+        engine sanitizes each resolved slot support as it serves it."""
         self._ran("fabric_plan")
         name = f"fabric_plan:g{fp.groups}"
-        if len(fp.plans) != fp.n_slots or len(fp.lost) != fp.n_slots:
-            self._fail(name, f"plan/lost length != n_slots ({fp.n_slots})")
+        if fp.plans is not None and len(fp.plans) != fp.n_slots:
+            self._fail(name, f"plan length != n_slots ({fp.n_slots})")
+        if len(fp.lost) != fp.n_slots:
+            self._fail(name, f"lost length != n_slots ({fp.n_slots})")
         if not (0.0 <= fp.disagreement <= 1.0):
             self._fail(name, f"disagreement {fp.disagreement} not in [0, 1]")
         if (fp.lost < 0).any():
             self._fail(name, "negative collision loss")
-        for s, (pid, cap) in enumerate(fp.plans):
+        for s, (pid, cap) in enumerate(fp.plans or ()):
             self.check_plan_pairs(pid, cap, n, d_hat, w,
                                   label=f"{name}:slot{s}")
         contested = getattr(fp, "contested", None)
@@ -271,17 +282,25 @@ class Sanitizer:
 
     def check_conservation(self, injected: float, delivered: float,
                            queued: float, label: str = "conservation",
-                           float32: bool = False) -> None:
-        """Bit ledger: injected = delivered + still-queued, within the
-        engine's float budget.  ``queued`` must include every holding
-        structure (VOQ + relay buckets); capacity-side losses (collisions,
-        dark windows) leave bits queued and so never appear here."""
+                           float32: bool = False,
+                           fault_lost: float = 0.0) -> None:
+        """Bit ledger: injected = delivered + still-queued + fault-lost,
+        within the engine's float budget.  ``queued`` must include every
+        holding structure (VOQ + relay buckets); capacity-side losses
+        (collisions, dark windows) leave bits queued and so never appear
+        here.  ``fault_lost`` is the explicit ledger of bits stranded by
+        abrupt failures (``tor_fail`` VOQ flushes) — zero on a fault-free
+        run, and the only term that may absorb bits the data plane will
+        never deliver."""
         self._ran("conservation")
-        resid = injected - (delivered + queued)
+        if fault_lost < 0:
+            self._fail(label, f"negative fault_lost ledger ({fault_lost:.6g})")
+        resid = injected - (delivered + queued + fault_lost)
         if abs(resid) > self._tol(injected, float32=float32):
             self._fail(label,
                        f"bits not conserved: injected {injected:.6g} != "
                        f"delivered {delivered:.6g} + queued {queued:.6g} "
+                       f"+ fault_lost {fault_lost:.6g} "
                        f"(residual {resid:.6g})")
 
     def check_credit_closure(self, injected: float, delivered: float,

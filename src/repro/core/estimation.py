@@ -144,6 +144,18 @@ class RingViews:
         masks, owner = np.unique(eff, axis=0, return_inverse=True)
         return masks, owner.reshape(-1)
 
+    def excise(self, dead_tx: np.ndarray, dead_rx: np.ndarray) -> "RingViews":
+        """Remove failed nodes from the estimated demand: zero the rows of
+        dead senders and the columns toward dead receivers, so the
+        schedule rebuilt from these views allocates no circuits to either
+        and healthy ports reclaim the freed capacity.  ``dead_tx`` /
+        ``dead_rx`` are (n,) bool masks; returns a new RingViews (``have``
+        is unchanged — the gather still ran, the content is excised)."""
+        rows = self.rows.copy()
+        rows[np.asarray(dead_tx, dtype=bool), :] = 0
+        rows[:, np.asarray(dead_rx, dtype=bool)] = 0
+        return RingViews(rows=rows, have=self.have)
+
 
 def ring_all_views(
     local_rows: np.ndarray, steps: int | None = None

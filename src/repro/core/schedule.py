@@ -24,6 +24,7 @@ __all__ = [
     "vermilion_schedule",
     "per_node_schedules",
     "effective_perms",
+    "planes_changed",
     "schedule_disagreement",
     "oblivious_schedule",
     "greedy_matching_schedule",
@@ -322,6 +323,31 @@ def effective_perms(
                 f"{(s.T, s.n, s.d_hat)} != {(base.T, base.n, base.d_hat)}")
     perms = np.stack([s.perms for s in schedules])       # (G, T, n)
     return perms[np.asarray(owner), :, np.arange(n)].T   # (T, n)
+
+
+def planes_changed(
+    old_eff: np.ndarray, new_eff: np.ndarray, d_hat: int
+) -> np.ndarray:
+    """Which port planes a schedule swap actually retunes.
+
+    Plane p executes the matching subsequence ``eff[p::d_hat]``; a swap
+    only forces plane p through the reconfiguration dark window when that
+    subsequence differs between the outgoing and incoming effective
+    plans.  Returns a (d_hat,) bool mask.  Plans with different periods
+    (e.g. an oblivious T = n-1 plan replaced by a vermilion T = k*n one)
+    retune everything: all True.  Phase alignment at the swap slot is
+    deliberately ignored — a plane whose matching *cycle* is unchanged
+    keeps serving through the swap even if the swap shifts its phase,
+    matching the fabric model where retuning (not re-phasing) costs the
+    dark window.
+    """
+    if old_eff.shape != new_eff.shape:
+        return np.ones(d_hat, dtype=bool)
+    changed = np.zeros(d_hat, dtype=bool)
+    for p in range(d_hat):
+        changed[p] = not np.array_equal(old_eff[p::d_hat],
+                                        new_eff[p::d_hat])
+    return changed
 
 
 def schedule_disagreement(

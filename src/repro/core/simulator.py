@@ -85,6 +85,37 @@ through one slot loop with a leading batch axis:
    schedule serving in the interim.  :func:`phase_shifting_workload`
    generates the non-stationary (phase-train) traffic that exercises it.
 
+7. **Fault injection & degraded service.**  A timed
+   :class:`repro.core.faults.FaultSchedule` threads failures through the
+   sparse single-hop engine (``SweepCase.faults`` / ``simulate``) and the
+   adaptive loop (``AdaptiveCase.faults``): dead planes, dead or flapping
+   per-plane ports, graceful ToR drains (injection stops, forwarding
+   continues until the VOQs empty — no bits lost), and abrupt ToR
+   failures (rows/columns dark; the bits stranded in the dead node's
+   VOQs are charged to an explicit ``fault_lost_bits`` ledger, and
+   arrivals refused at a dead/draining ingress to ``fault_refused_bits``,
+   so bit conservation closes as injected = delivered + queued +
+   fault_lost with injected = offered - refused).  Failed circuits are
+   masked per slot *after* collision arbitration (a dead input's
+   configured claim still jams its output port — the conservative
+   optical model), and bits queued toward a dead destination stay queued
+   (capacity-side, like collision loss).  Reconfiguration itself is
+   fault-shaped: only planes whose matching subsequence actually changed
+   pay the ``reconfig_penalty_slots`` dark window (``planes_changed``),
+   and with ``activation_jitter_slots > 0`` each ToR activates a new
+   schedule at its own jittered slot, the data plane serving the mixed
+   old/new port configuration through the transition with contention
+   re-arbitrated per slot under the case's collision policy.  The
+   control plane closes the loop when ``repair=True``: persistently
+   silent gather rows mark drained/dead senders, and data-plane NACK
+   counters (claims that held backlog but delivered nothing, aggregated
+   per destination and per plane over an epoch) mark dead receivers and
+   dead planes; detected failures are excised from the estimated matrix
+   (``RingViews.excise``) and dead planes from the rebuild itself
+   (schedules reconstructed over the surviving planes via
+   ``_FabricPlan.plane_map``), so healthy ports reclaim the failed
+   capacity through the ordinary rounding/Euler-split path.
+
 The pre-vectorization engine is kept verbatim as
 :func:`simulate_reference`; golden-trace tests pin the new engine to it on
 small instances for all three modes (exact FCT equality; aggregate
@@ -124,11 +155,13 @@ import numpy as np
 
 from ..analysis.sanitize import make_sanitizer
 from .estimation import TrafficEstimator, estimate_all_views
+from .faults import FaultSchedule, claims_fault_mask
 from .schedule import (
     Schedule,
     effective_perms,
     oblivious_schedule,
     per_node_schedules,
+    planes_changed,
     vermilion_schedule,
 )
 from .traffic import phase_train
@@ -307,6 +340,9 @@ class SimResult:
     delivered_bits: float
     offered_bits: float
     avg_hops: float = 1.0
+    fault_lost_bits: float = 0.0     # VOQ bits stranded by abrupt failures
+    fault_refused_bits: float = 0.0  # offered bits refused at a dead or
+                                     # draining ingress (never injected)
 
     def fct_percentile(self, q: float, short_cutoff: float | None = None,
                        long_cutoff: float | None = None) -> float:
@@ -770,11 +806,21 @@ def _simulate_batch_singlehop(
     cases: list[tuple[Schedule, Workload]],
     bits_per_slot: float,
     san=None,
+    faults: list | None = None,
 ) -> list[SimResult]:
     """Sparse single-hop engine: a slot only moves bits over its <= n*d_hat
     circuits, so the whole slot step is O(B n d_hat) scalar ops on the
     circuit support — no dense (B, n, n) work at all.  VOQ dynamics are
-    element-for-element identical to the dense path."""
+    element-for-element identical to the dense path.
+
+    ``faults`` optionally carries one :class:`FaultSchedule` (or None) per
+    case.  A case's timeline stays on the memoized fault-free plans until
+    its first event fires (bit-identical prefix); after that its slot
+    supports are rebuilt from the schedule's matching block with failed
+    circuits masked (memoized per (case, period slot, fault version)).
+    Bits stranded by ``tor_fail`` flushes go to the per-case
+    ``fault_lost_bits`` ledger; arrivals at a non-injecting ingress are
+    refused into ``fault_refused_bits`` and never enter the fabric."""
     B = len(cases)
     n = cases[0][1].n
     for sched, wl in cases:
@@ -818,6 +864,45 @@ def _simulate_batch_singlehop(
                 memo[key] = plan
         return plan
 
+    # fault timelines: only cases with a nonempty schedule pay anything
+    tl_items: list[tuple[int, "object"]] = []
+    if faults:
+        for b, fs in enumerate(faults):
+            if fs:
+                tl_items.append((b, fs.compile(n, cases[b][0].d_hat)))
+    tl_by_case = dict(tl_items)
+    fault_lost = np.zeros(B)
+    fault_refused = np.zeros(B)
+    src0 = np.arange(n)
+    fmemo: dict[tuple, dict] = {}
+
+    def masked_case_plan(b: int, ps: int, tl) -> dict:
+        """Case b's period-slot-ps support under its current fault state:
+        rebuilt from the matching block (plane identity needed for the
+        mask), parallel surviving circuits accumulated, self-loops
+        dropped — the same pairs slot_circuits emits, minus dead ones."""
+        key = (b, ps, tl.version)
+        plan = fmemo.get(key)
+        if plan is None:
+            sched = cases[b][0]
+            blk = sched.perms[ps * sched.d_hat:(ps + 1) * sched.d_hat]
+            keep = claims_fault_mask(blk, tl.link_ok()) & (blk != src0)
+            cpid = ((b * n + np.broadcast_to(src0, blk.shape)) * n
+                    + blk)[keep]
+            upid, inv = np.unique(cpid, return_inverse=True)
+            w_b = bits_per_slot * (1.0 - sched.recfg_frac)
+            cap = np.bincount(inv, weights=np.full(len(cpid), w_b),
+                              minlength=len(upid))
+            plan = {"pid": upid, "cap": cap,
+                    "case": np.full(len(upid), b, dtype=np.int64)}
+            if san is not None:
+                san.check_plan_pairs(upid % (n * n), cap, n, sched.d_hat,
+                                     w_b, label=f"singlehop:case{b}:"
+                                                f"slot{ps}:faulted")
+            if len(fmemo) < 4096:
+                fmemo[key] = plan
+        return plan
+
     f_off, pid, f_size, fct, credit, order, bucket = _concat_flows(
         cases, n, horizons, H)
 
@@ -827,11 +912,41 @@ def _simulate_batch_singlehop(
 
     for slot in range(H):
         newf = order[bucket[slot]:bucket[slot + 1]]
+        dirty = False
+        if tl_items:
+            for b, tl in tl_items:
+                for node in tl.advance(slot):
+                    base = (b * n + int(node)) * n
+                    fault_lost[b] += float(voq_flat[base:base + n].sum())
+                    voq_flat[base:base + n] = 0.0
+                dirty = dirty or not tl.clean
+            if newf.size and dirty:
+                ok = np.ones(len(newf), dtype=bool)
+                fsrc = (pid[newf] // n) % n
+                fcase = pid[newf] // (n * n)
+                for b, tl in tl_items:
+                    if not tl.inject_ok.all():
+                        sel = fcase == b
+                        ok[sel] = tl.inject_ok[fsrc[sel]]
+                if not ok.all():
+                    np.add.at(fault_refused, fcase[~ok], f_size[newf[~ok]])
+                    newf = newf[ok]
         if newf.size:
             np.add.at(voq_flat, pid[newf], f_size[newf])
             credit.arrive(newf)
 
-        plan = plan_for(slot)
+        if dirty:
+            parts = []
+            for b in range(B):
+                tl = tl_by_case.get(b)
+                if tl is None or tl.clean:
+                    parts.append(per_case[b][slot % ns[b]])
+                else:
+                    parts.append(masked_case_plan(b, slot % ns[b], tl))
+            plan = {k: np.concatenate([d[k] for d in parts])
+                    for k in ("pid", "cap", "case")}
+        else:
+            plan = plan_for(slot)
         spid = plan["pid"]
         scap = plan["cap"]
         if not all_live:
@@ -847,10 +962,12 @@ def _simulate_batch_singlehop(
     for b, (sched, wl) in enumerate(cases):
         sl = slice(f_off[b], f_off[b + 1])
         offered = float(wl.size[wl.arrival < wl.horizon].sum())
+        injected = offered - float(fault_refused[b])
         if san is not None:
             san.check_conservation(
-                offered, float(delivered_total[b]), float(voq_case[b]),
-                label=f"singlehop:case{b}:conservation")
+                injected, float(delivered_total[b]), float(voq_case[b]),
+                label=f"singlehop:case{b}:conservation",
+                fault_lost=float(fault_lost[b]))
         ideal = wl.horizon * n * sched.d_hat * bits_per_slot
         out.append(SimResult(
             fct_slots=fct[sl],
@@ -858,10 +975,15 @@ def _simulate_batch_singlehop(
             utilization=float(delivered_total[b]) / ideal,
             delivered_bits=float(delivered_total[b]),
             offered_bits=offered,
+            fault_lost_bits=float(fault_lost[b]),
+            fault_refused_bits=float(fault_refused[b]),
         ))
     if san is not None:
         rem, completed = credit.remaining_active()
-        injected = sum(r.offered_bits for r in out)
+        injected = sum(r.offered_bits - r.fault_refused_bits for r in out)
+        # flushed (fault-lost) bits stay on their never-completing flows,
+        # so they sit in remaining_active and drop out of the credit —
+        # the closure holds with no fault term
         san.check_credit_closure(injected, float(delivered_total.sum()),
                                  rem, completed, label="singlehop:credit")
     return out
@@ -1058,14 +1180,31 @@ def simulate(
     bits_per_slot: float,
     mode: str = "single_hop",
     sanitize: bool | None = None,
+    faults: FaultSchedule | None = None,
 ) -> SimResult:
     """Run ``wl`` over ``sched`` for ``wl.horizon`` slots (vectorized).
 
     ``sanitize``: run the :mod:`repro.analysis.sanitize` contract checks
     (default: the ``REPRO_SANITIZE`` env var); results are bit-identical
     either way.
+
+    ``faults``: an optional :class:`repro.core.faults.FaultSchedule` of
+    timed failure events (single_hop mode only — the two-hop relay planes
+    don't model per-circuit failure).  An empty schedule is bit-identical
+    to passing None.
     """
     san = make_sanitizer(sanitize)
+    if faults:
+        if not isinstance(faults, FaultSchedule):
+            raise ValueError("faults must be a FaultSchedule "
+                             f"(got {type(faults).__name__})")
+        if mode != "single_hop":
+            raise ValueError(
+                "fault injection is only supported on the single_hop "
+                f"engine (got mode={mode!r})")
+        faults.validate(wl.n, sched.d_hat)
+        return _simulate_batch_singlehop([(sched, wl)], bits_per_slot,
+                                         san=san, faults=[faults])[0]
     if mode == "single_hop":
         return _simulate_batch_singlehop([(sched, wl)], bits_per_slot,
                                          san=san)[0]
@@ -1078,12 +1217,34 @@ def simulate(
 
 @dataclass(frozen=True)
 class SweepCase:
-    """One (schedule, workload, mode) point of a sweep grid."""
+    """One (schedule, workload, mode) point of a sweep grid.
+
+    ``faults`` optionally injects a timed
+    :class:`repro.core.faults.FaultSchedule` (single_hop cases, numpy
+    backend only); an empty schedule behaves exactly like None.
+    Malformed cases — unknown mode, bad fault events — raise
+    ``ValueError`` at construction.
+    """
     sched: Schedule
     wl: Workload
     mode: str = "single_hop"
     label: str = ""
     meta: dict = field(default_factory=dict)
+    faults: FaultSchedule | None = None
+
+    def __post_init__(self) -> None:
+        if self.mode not in _MODES:
+            raise ValueError(f"mode must be one of {_MODES} "
+                             f"(got {self.mode!r})")
+        if self.faults is not None:
+            if not isinstance(self.faults, FaultSchedule):
+                raise ValueError("faults must be a FaultSchedule "
+                                 f"(got {type(self.faults).__name__})")
+            if self.faults and self.mode != "single_hop":
+                raise ValueError(
+                    "fault injection is only supported on single_hop "
+                    f"cases (got mode={self.mode!r})")
+            self.faults.validate(self.wl.n, self.sched.d_hat)
 
 
 @dataclass
@@ -1125,11 +1286,16 @@ def run_sweep(
     for i, c in enumerate(cases):
         if c.mode not in _MODES:
             raise ValueError(c.mode)
+        if c.faults and backend == "jax":
+            raise ValueError(
+                "fault injection is only supported on the numpy backend "
+                "(the jax aggregate kernels have no per-slot fault mask)")
         groups.setdefault((c.wl.n, c.mode == "single_hop"), []).append(i)
     rows: list[SweepRow | None] = [None] * len(cases)
     for (_, single), idxs in groups.items():
         batch = [(cases[i].sched, cases[i].wl) for i in idxs]
         modes = [cases[i].mode for i in idxs]
+        batch_faults = [cases[i].faults for i in idxs]
         t0 = time.perf_counter()
         if backend == "jax":
             results = (_aggregate_batch_jax(batch, bits_per_slot, san=san)
@@ -1137,7 +1303,9 @@ def run_sweep(
                        else _twohop_batch_jax(batch, bits_per_slot, modes,
                                               san=san))
         elif single:
-            results = _simulate_batch_singlehop(batch, bits_per_slot, san=san)
+            results = _simulate_batch_singlehop(
+                batch, bits_per_slot, san=san,
+                faults=batch_faults if any(batch_faults) else None)
         else:
             results = _simulate_batch(batch, bits_per_slot, modes, san=san)
         dt = (time.perf_counter() - t0) / len(idxs)
@@ -1152,7 +1320,7 @@ def run_sweep(
 # ---------------------------------------------------------------------------
 
 _POLICIES = ("adaptive", "oracle", "stale", "oblivious")
-_COLLISIONS = ("drop", "lowest", "receiver")
+_COLLISIONS = ("drop", "lowest", "receiver", "fullest")
 
 
 @dataclass(frozen=True)
@@ -1170,14 +1338,84 @@ class _FabricPlan:
     (src != dst inputs whose output port at least one other input also
     claims) — the capacity ``contested * w`` bounds ``lost`` from above
     for every arbitration policy, which is the disagreement-accounting
-    closure the sanitizer enforces."""
+    closure the sanitizer enforces.
 
-    plans: list
+    ``eff``/``nonself``/``win`` carry the raw (T, n) claim structure so
+    the degraded-service paths (fault masks, partially-dark planes, mixed
+    old/new activation) can rebuild any slot's support from first
+    principles: ``eff[t, i]`` the port input i is tuned to, ``win`` the
+    statically-arbitrated winners.  ``win`` (and ``plans``) are ``None``
+    for queue-aware arbitration (``collision="fullest"`` under
+    disagreement), where winners depend on per-slot VOQ depth and the
+    engine resolves each served slot dynamically.  ``plane_map`` maps the
+    plan's logical plane rows to physical fabric planes — the identity
+    except for repaired schedules rebuilt over the surviving planes."""
+
+    plans: list | None
     n_slots: int
     disagreement: float
     lost: np.ndarray
     groups: int
     contested: np.ndarray | None = None
+    eff: np.ndarray | None = None      # (T, n) effective port claims
+    nonself: np.ndarray | None = None  # (T, n) claim would carry traffic
+    win: np.ndarray | None = None      # (T, n) static winners; None=dynamic
+    w: float = 0.0                     # bits per circuit-slot after guard
+    plane_map: np.ndarray | None = None
+
+
+def _resolve_slot_claims(
+    claims: np.ndarray,
+    valid: np.ndarray,
+    planes: np.ndarray,
+    rot: np.ndarray,
+    collision: str,
+    voq: np.ndarray,
+    n: int,
+) -> tuple[np.ndarray, int]:
+    """Arbitrate one slot's output-port contention dynamically.
+
+    ``claims``/``valid``: (R, n) configured output ports and which of
+    them exist (async transitions stack old- and new-plan rows, with
+    validity selecting each node's side); ``planes``: (R,) the physical
+    plane of each claim row — contention groups by (physical plane,
+    output port), so old- and new-plan claims on the same plane jam each
+    other exactly like same-row claims; ``rot``: (R,) the rotating-
+    priority base (matching index mod n) for ``"receiver"``.
+    ``"fullest"`` grants a contested port to the claiming input with the
+    deepest VOQ backlog toward it (ties to the lowest input index) —
+    queue-aware arbitration needs the live ``voq`` and so cannot be
+    precomputed.  Self-loop claims contend (they jam the receiver) but
+    never carry traffic, matching the static path.
+
+    Returns ``(win, lost_claims)``: the (R, n) winner mask among valid
+    claims, and the number of traffic-carrying (nonself) claims that
+    lost to contention.
+    """
+    rr, ii = np.nonzero(valid)
+    cv = claims[rr, ii]
+    key = planes[rr] * n + cv
+    uk, inv = np.unique(key, return_inverse=True)
+    contested = np.bincount(inv)[inv] > 1
+    if collision == "drop":
+        wflat = ~contested
+    else:
+        if collision == "lowest":
+            order = np.argsort(inv, kind="stable")   # input index ascending
+        elif collision == "receiver":
+            prio = (ii - rot[rr]) % n
+            order = np.lexsort((prio, inv))
+        else:  # fullest: deepest VOQ toward the claimed port wins
+            depth = voq[ii * n + cv]
+            order = np.lexsort((ii, -depth, inv))
+        io = inv[order]
+        first = np.r_[True, io[1:] != io[:-1]]
+        wflat = np.zeros(len(rr), dtype=bool)
+        wflat[order[first]] = True
+    win = np.zeros_like(valid)
+    win[rr, ii] = wflat
+    lost_claims = int(((cv != ii) & ~wflat).sum())
+    return win, lost_claims
 
 
 def _fabric_plan(
@@ -1185,6 +1423,7 @@ def _fabric_plan(
     owner: np.ndarray,
     bits_per_slot: float,
     collision: str,
+    plane_map: np.ndarray | None = None,
 ) -> _FabricPlan:
     """Merge per-node schedules into the fabric's effective circuit plan.
 
@@ -1210,19 +1449,38 @@ def _fabric_plan(
     matching the consistent path, where self-loops are dropped from the
     circuit support.  Lost capacity counts only claims that would have
     carried traffic (src != dst) had the port not been contested.
+
+    ``"fullest"`` (queue-aware arbitration) cannot be precomputed — the
+    winner depends on per-slot VOQ depth — so under disagreement the
+    returned plan is *dynamic*: ``plans``/``win`` are None, ``lost`` is
+    zero (the engine charges collision loss per served slot via
+    :func:`_resolve_slot_claims`), and the static claim structure
+    (``eff``/``nonself``/``contested``/disagreement) is still carried for
+    the engine and the accounting.
+
+    ``plane_map`` records which physical planes the schedules' logical
+    plane rows occupy (identity by default) — repaired schedules rebuilt
+    over the surviving planes of a degraded fabric pass the survivors.
     """
     if collision not in _COLLISIONS:
         raise ValueError(f"collision must be one of {_COLLISIONS} "
                          f"(got {collision!r})")
+    if plane_map is None:
+        plane_map = np.arange(scheds[0].d_hat, dtype=np.int64)
     if len(scheds) == 1:
         sched = scheds[0]
         n = sched.n
         plans = [(at * n + v, cap)
                  for at, v, cap in sched.slot_circuits(bits_per_slot)]
+        perms = sched.perms
         return _FabricPlan(plans=plans, n_slots=sched.n_slots,
                            disagreement=0.0,
                            lost=np.zeros(sched.n_slots), groups=1,
-                           contested=np.zeros(sched.n_slots))
+                           contested=np.zeros(sched.n_slots),
+                           eff=perms, nonself=perms != np.arange(n)[None, :],
+                           win=np.ones(perms.shape, dtype=bool),
+                           w=bits_per_slot * (1.0 - sched.recfg_frac),
+                           plane_map=plane_map)
 
     base = scheds[0]
     n, T, d_hat, n_slots = base.n, base.T, base.d_hat, base.n_slots
@@ -1239,6 +1497,23 @@ def _fabric_plan(
     kf = (np.arange(T)[:, None] * n + eff).reshape(-1)   # claim key (t, v)
     claims = np.bincount(kf, minlength=T * n)
     contested = (claims[kf] > 1).reshape(T, n)
+    nonself = eff != src[None, :]
+    slot_of = np.arange(T) // d_hat
+    # same claim counting as schedule_disagreement(scheds, owner), reused
+    contested_n = np.bincount(
+        slot_of, weights=(nonself & contested).sum(axis=1),
+        minlength=n_slots)
+
+    if collision == "fullest":
+        # queue-aware winners are a per-slot function of VOQ state: the
+        # engine resolves each served slot dynamically and charges its
+        # collision loss there
+        return _FabricPlan(plans=None, n_slots=n_slots,
+                           disagreement=float(contested.mean()),
+                           lost=np.zeros(n_slots), groups=len(scheds),
+                           contested=contested_n,
+                           eff=eff, nonself=nonself, win=None, w=w,
+                           plane_map=plane_map)
 
     if collision == "drop":
         win = ~contested
@@ -1254,9 +1529,7 @@ def _fabric_plan(
         win[order[first]] = True
         win = win.reshape(T, n)
 
-    nonself = eff != src[None, :]
     live = win & nonself
-    slot_of = np.arange(T) // d_hat
     lost = np.bincount(slot_of, weights=(nonself & ~live).sum(axis=1) * w,
                        minlength=n_slots)
 
@@ -1268,14 +1541,12 @@ def _fabric_plan(
     pid_u = upid % (n * n)
     plans = [(pid_u[bounds[s]:bounds[s + 1]], cap[bounds[s]:bounds[s + 1]])
              for s in range(n_slots)]
-    # same claim counting as schedule_disagreement(scheds, owner), reused
-    contested_n = np.bincount(
-        slot_of, weights=(nonself & contested).sum(axis=1),
-        minlength=n_slots)
     return _FabricPlan(plans=plans, n_slots=n_slots,
                        disagreement=float(contested.mean()),
                        lost=lost, groups=len(scheds),
-                       contested=contested_n)
+                       contested=contested_n,
+                       eff=eff, nonself=nonself, win=win, w=w,
+                       plane_map=plane_map)
 
 
 def _quantizer_unit(
@@ -1366,7 +1637,38 @@ class AdaptiveCase:
     epoch-layer dynamics bit-identical to the uncharged loop.  Together
     with ``epoch_slots`` it exposes the epoch-length tradeoff (short epochs
     track phases faster but pay the dark window more often) — swept in
-    ``benchmarks/adaptive_bench.py run_epoch_tradeoff()``.
+    ``benchmarks/adaptive_bench.py run_epoch_tradeoff()``.  The dark
+    window is *per plane*: only planes whose matching subsequence
+    actually changed at the swap go dark (``planes_changed``); untouched
+    planes keep serving through the swap.
+
+    ``faults``: an optional timed
+    :class:`repro.core.faults.FaultSchedule` injected into the run (see
+    module docstring §7).  An empty schedule is bit-identical to None.
+
+    ``activation_jitter_slots``: per-node asynchronous activation — each
+    ToR activates a newly-swapped schedule at its own slot, drawn
+    uniformly from the window after the swap (seeded from ``seed``).  The
+    data plane serves the mixed old/new configuration through the
+    transition, with output-port contention between the two generations
+    re-arbitrated per slot under ``collision``.  0 (default) restores the
+    synchronous all-at-once swap bit-identically.
+
+    ``repair``: close the detection/repair loop (``policy="adaptive"``
+    only).  The control plane excises senders whose gather rows stay
+    silent for ``repair_after_epochs`` consecutive epochs and — from the
+    data plane's per-destination / per-plane NACK counters — dead
+    receivers and dead planes, then rebuilds schedules on the surviving
+    matrix and planes so healthy ports reclaim the failed capacity.
+
+    ``swap_tv_threshold``: schedule-churn hysteresis.  When > 0, an
+    epoch's recompute is skipped while the normalized estimate's total-
+    variation distance from the last installed estimate stays below the
+    threshold *and* the repair state (excisions, surviving planes) is
+    unchanged — a converged stationary estimate then stops paying the
+    reconfiguration dark window, while a phase shift or a repair event
+    still triggers an immediate rebuild.  0 (default) recomputes every
+    epoch, the historical behavior.
     """
 
     wl: Workload
@@ -1385,8 +1687,65 @@ class AdaptiveCase:
     slot_seconds: float = 4.5e-6
     method: str = "euler"
     reconfig_penalty_slots: int = 0
+    faults: FaultSchedule | None = None
+    activation_jitter_slots: int = 0
+    repair: bool = False
+    repair_after_epochs: int = 2
+    swap_tv_threshold: float = 0.0
     label: str = ""
     meta: dict = field(default_factory=dict)
+
+    def __post_init__(self) -> None:
+        if self.policy not in _POLICIES:
+            raise ValueError(f"policy must be one of {_POLICIES} "
+                             f"(got {self.policy!r})")
+        if not isinstance(self.epoch_slots, (int, np.integer)) \
+                or self.epoch_slots < 1:
+            raise ValueError(f"epoch_slots must be an int >= 1 "
+                             f"(got {self.epoch_slots!r})")
+        if self.collision not in _COLLISIONS:
+            raise ValueError(f"collision must be one of {_COLLISIONS} "
+                             f"(got {self.collision!r})")
+        cs = self.construction_slots
+        if cs != "measured" and not (isinstance(cs, (int, np.integer))
+                                     and cs >= 0):
+            raise ValueError(
+                "construction_slots must be a nonnegative int or "
+                f"'measured' (got {cs!r})")
+        if self.slot_seconds <= 0:
+            raise ValueError(f"slot_seconds must be positive "
+                             f"(got {self.slot_seconds!r})")
+        if not isinstance(self.reconfig_penalty_slots, (int, np.integer)) \
+                or self.reconfig_penalty_slots < 0:
+            raise ValueError(
+                "reconfig_penalty_slots must be a nonnegative int "
+                f"(got {self.reconfig_penalty_slots!r})")
+        gs = self.gather_steps
+        if gs is not None and not (0 <= gs <= self.wl.n - 1):
+            raise ValueError(
+                f"gather_steps must be in [0, n - 1] = [0, {self.wl.n - 1}] "
+                f"— a ring AllGather finishes in n - 1 steps (got {gs!r})")
+        if not isinstance(self.activation_jitter_slots, (int, np.integer)) \
+                or self.activation_jitter_slots < 0:
+            raise ValueError(
+                "activation_jitter_slots must be a nonnegative int "
+                f"(got {self.activation_jitter_slots!r})")
+        if not isinstance(self.repair_after_epochs, (int, np.integer)) \
+                or self.repair_after_epochs < 1:
+            raise ValueError(f"repair_after_epochs must be an int >= 1 "
+                             f"(got {self.repair_after_epochs!r})")
+        if self.swap_tv_threshold < 0:
+            raise ValueError(f"swap_tv_threshold must be nonnegative "
+                             f"(got {self.swap_tv_threshold!r})")
+        if self.repair and self.policy != "adaptive":
+            raise ValueError(
+                "repair requires policy='adaptive' (the other policies "
+                f"never recompute; got policy={self.policy!r})")
+        if self.faults is not None:
+            if not isinstance(self.faults, FaultSchedule):
+                raise ValueError("faults must be a FaultSchedule "
+                                 f"(got {type(self.faults).__name__})")
+            self.faults.validate(self.wl.n, self.d_hat)
 
 
 @dataclass
@@ -1421,6 +1780,13 @@ class AdaptiveRow:
     schedule_groups_max: int = 1    # most distinct per-node schedules that
                                     # were ever live at once (1 = the fabric
                                     # never disagreed)
+    fault_lost_bits: float = 0.0    # VOQ bits stranded by abrupt tor_fail
+    fault_refused_bits: float = 0.0  # arrivals refused at drained/dead ToRs
+    dark_plane_slots: float = 0.0   # plane-slots dark to reconfiguration
+                                    # (per-plane dark: a full-fabric swap
+                                    # charges d_hat per dark slot)
+    excised_nodes: int = 0          # ToRs the repair loop excised
+    excised_planes: int = 0         # planes the repair loop excised
 
 
 def _run_adaptive_case(case: AdaptiveCase, bits_per_slot: float,
@@ -1482,12 +1848,13 @@ def _run_adaptive_case(case: AdaptiveCase, bits_per_slot: float,
     construction_s = 0.0
     last_construction = 0.0
 
-    def consistent_plan(sched: Schedule) -> _FabricPlan:
+    def consistent_plan(sched: Schedule,
+                        plane_map: np.ndarray | None = None) -> _FabricPlan:
         fp = _fabric_plan([sched], np.zeros(n, dtype=np.int64),
-                          bits_per_slot, case.collision)
+                          bits_per_slot, case.collision, plane_map=plane_map)
         if san is not None:
             san.check_schedule(sched)
-            san.check_fabric_plan(fp, n, case.d_hat, san_w)
+            san.check_fabric_plan(fp, n, sched.d_hat, san_w)
         return fp
 
     def vsched(m: np.ndarray, seed: int) -> Schedule:
@@ -1500,11 +1867,13 @@ def _run_adaptive_case(case: AdaptiveCase, bits_per_slot: float,
         construction_s += last_construction
         return s
 
-    def vsched_per_node(views, seed: int, unique) -> _FabricPlan:
+    def vsched_per_node(views, seed: int, unique, d_hat: int | None = None,
+                        plane_map: np.ndarray | None = None) -> _FabricPlan:
         nonlocal construction_s, last_construction
+        dh = case.d_hat if d_hat is None else d_hat
         t0 = time.perf_counter()
         scheds, owner = per_node_schedules(
-            views, k=case.k, d_hat=case.d_hat, recfg_frac=case.recfg_frac,
+            views, k=case.k, d_hat=dh, recfg_frac=case.recfg_frac,
             seed=seed, normalize=case.normalize, method=case.method,
             unique=unique)
         dt = time.perf_counter() - t0
@@ -1515,11 +1884,12 @@ def _run_adaptive_case(case: AdaptiveCase, bits_per_slot: float,
         # complete gather there is exactly one view, so this reduces to
         # the single-schedule charge exactly)
         last_construction = dt / len(scheds)
-        fp = _fabric_plan(scheds, owner, bits_per_slot, case.collision)
+        fp = _fabric_plan(scheds, owner, bits_per_slot, case.collision,
+                          plane_map=plane_map)
         if san is not None:
             for s in scheds:       # pre-merge: every row a permutation
                 san.check_schedule(s)
-            san.check_fabric_plan(fp, n, case.d_hat, san_w)
+            san.check_fabric_plan(fp, n, dh, san_w)
         return fp
 
     if case.policy in ("oracle", "stale"):
@@ -1536,26 +1906,92 @@ def _run_adaptive_case(case: AdaptiveCase, bits_per_slot: float,
     coll_ep = np.zeros(n_epochs)    # bits of capacity lost to collisions
     recomputes = 0
     stale_slots = 0
-    dark_until = 0                  # circuits dark while switches retarget
     dark_slots = 0
     groups_max = 1
     injected_cum = 0.0              # sanitizer's running bit ledger
 
+    # --- degraded-service state (all inert on the historical fast path) --
+    src0 = np.arange(n)
+    tl = case.faults.compile(n, case.d_hat) if case.faults else None
+    fault_lost = 0.0                # VOQ bits stranded by tor_fail
+    fault_refused = 0.0             # arrivals refused at drained/dead ToRs
+    plane_dark_until = np.zeros(case.d_hat, dtype=np.int64)
+    dark_plane_slots = 0.0
+    jit = int(case.activation_jitter_slots)
+    act_rng = np.random.default_rng([abs(int(case.seed)), 0xAC7])
+    # (old_fp, old_t0, per-node activation slots, end slot) while a
+    # jittered swap is mid-transition, else None
+    transition: tuple[_FabricPlan, int, np.ndarray, int] | None = None
+    # repair-loop detection state
+    tx_silent = np.zeros(n, dtype=np.int64)   # consecutive silent epochs
+    excised_tx = np.zeros(n, dtype=bool)
+    excised_rx = np.zeros(n, dtype=bool)
+    plane_alive = np.ones(case.d_hat, dtype=bool)  # repair's fabric view
+    rx_want = np.zeros(n)
+    rx_nack = np.zeros(n)
+    plane_want = np.zeros(case.d_hat)
+    plane_nack = np.zeros(case.d_hat)
+    # churn hysteresis: normalized estimate + repair state at last rebuild
+    last_est: np.ndarray | None = None
+    last_sig: tuple | None = None
+
+    def activate(new_fp: _FabricPlan, s: int) -> None:
+        """Install a newly built plan at slot ``s``: darken only the
+        planes whose matchings actually changed, and (under activation
+        jitter) open the mixed old/new transition window."""
+        nonlocal fp, sched_t0, transition, groups_max
+        if penalty:
+            om, nm = fp.plane_map, new_fp.plane_map
+            if (fp.eff is None or new_fp.eff is None
+                    or fp.eff.shape != new_fp.eff.shape
+                    or not np.array_equal(om, nm)):
+                plane_dark_until[nm] = s + penalty   # everything retargets
+            else:
+                ch = planes_changed(fp.eff, new_fp.eff, len(nm))
+                plane_dark_until[nm[ch]] = s + penalty
+        if jit:
+            act = s + act_rng.integers(0, jit + 1, size=n)
+            transition = (fp, sched_t0, act, s + jit + 1)
+        fp, sched_t0 = new_fp, s
+        groups_max = max(groups_max, new_fp.groups)
+
     for slot in range(H):
         if pending is not None and slot >= pending[0]:
-            fp, sched_t0 = pending[1], slot
+            swap_fp = pending[1]
             pending = None
-            dark_until = slot + penalty
-            groups_max = max(groups_max, fp.groups)
+            activate(swap_fp, slot)
         if slot and slot % E == 0:
             epoch = slot // E
             if san is not None:
                 # per-epoch bit ledger: collision loss and dark windows are
-                # capacity-side, so queued bits close the ledger exactly
+                # capacity-side, so queued bits close the ledger exactly;
+                # tor_fail strands bits, charged to the fault_lost term
                 san.check_conservation(
                     injected_cum, float(delivered_ep.sum()),
-                    float(voq.sum()),
+                    float(voq.sum()), fault_lost=fault_lost,
                     label=f"adaptive:epoch{epoch - 1}:conservation")
+            repair_now = case.repair and case.policy == "adaptive"
+            if repair_now:
+                # dead senders: gather rows silent for repair_after_epochs
+                # consecutive epochs (the fleet EWMA would otherwise keep
+                # allocating circuits to a row that stopped refreshing)
+                silent = counters.sum(axis=1) <= 0.0
+                tx_silent[:] = np.where(silent, tx_silent + 1, 0)
+                excised_tx |= tx_silent >= case.repair_after_epochs
+                # dead receivers / planes: the data plane counts wanting
+                # circuits whose far side never carried (fault-masked) as
+                # NACKs; a near-total NACK ratio flags the target.  A dead
+                # plane NACKs ~all its claims, a dead ToR ~all claims
+                # toward it on every plane; a single dead port sits at
+                # ~1/d_hat on both counters and is left in place
+                # (degraded service, no excision).
+                excised_rx |= (rx_want > 10) & (rx_nack > 0.9 * rx_want)
+                plane_alive &= ~((plane_want > 10)
+                                 & (plane_nack > 0.9 * plane_want))
+                rx_want[:] = 0.0
+                rx_nack[:] = 0.0
+                plane_want[:] = 0.0
+                plane_nack[:] = 0.0
             swap = None
             if case.policy == "adaptive":
                 views = estimate_all_views(
@@ -1563,6 +1999,10 @@ def _run_adaptive_case(case: AdaptiveCase, bits_per_slot: float,
                     steps=case.gather_steps)
                 if san is not None:
                     san.check_views(views)
+                if repair_now and (excised_tx.any() or excised_rx.any()):
+                    # excise failed senders/receivers from the estimate so
+                    # the rebuild allocates their capacity to healthy ports
+                    views = views.excise(excised_tx, excised_rx)
                 t = true_epoch[epoch - 1]
                 masks, owner = views.unique()
                 # estimate error: per-node TV distance vs the epoch truth,
@@ -1589,9 +2029,33 @@ def _run_adaptive_case(case: AdaptiveCase, bits_per_slot: float,
                         wts.append(counts[g])
                 if tvs:
                     est_tv[epoch - 1] = float(np.average(tvs, weights=wts))
-                if views.rows.sum() > 0:
-                    swap = vsched_per_node(views, case.seed + epoch,
-                                           (masks, owner))
+                build = views.rows.sum() > 0
+                if build and case.swap_tv_threshold > 0.0:
+                    # churn hysteresis: skip the rebuild while the
+                    # estimate hasn't materially moved and the repair
+                    # state (excisions, surviving planes) is unchanged —
+                    # a converged stationary estimate stops paying the
+                    # reconfiguration dark window
+                    cur = views.rows / views.rows.sum()
+                    sig = (plane_alive.tobytes(), excised_tx.tobytes(),
+                           excised_rx.tobytes())
+                    if (last_est is not None and sig == last_sig
+                            and 0.5 * np.abs(cur - last_est).sum()
+                                < case.swap_tv_threshold):
+                        build = False
+                    else:
+                        last_est, last_sig = cur, sig
+                if build:
+                    if repair_now and not plane_alive.all():
+                        dl = int(plane_alive.sum())
+                        if dl > 0:  # rebuild over the surviving planes
+                            swap = vsched_per_node(
+                                views, case.seed + epoch, (masks, owner),
+                                d_hat=dl,
+                                plane_map=np.nonzero(plane_alive)[0])
+                    else:
+                        swap = vsched_per_node(views, case.seed + epoch,
+                                               (masks, owner))
             elif case.policy == "oracle":
                 if oracle_m[epoch].sum() > 0:
                     swap = consistent_plan(
@@ -1601,10 +2065,8 @@ def _run_adaptive_case(case: AdaptiveCase, bits_per_slot: float,
                 charge = (int(np.ceil(last_construction / case.slot_seconds))
                           if measured else int(cs))
                 if charge == 0:
-                    fp, sched_t0 = swap, slot
                     pending = None   # a zero-cost swap supersedes any pending
-                    dark_until = slot + penalty
-                    groups_max = max(groups_max, fp.groups)
+                    activate(swap, slot)
                 else:
                     # the stale schedule keeps serving until construction
                     # finishes; a recompute next epoch supersedes this one
@@ -1613,7 +2075,18 @@ def _run_adaptive_case(case: AdaptiveCase, bits_per_slot: float,
         if pending is not None:
             stale_slots += 1
 
+        if tl is not None:
+            for f in tl.advance(slot):  # abrupt death strands the VOQs
+                fail_row = voq[f * n:(f + 1) * n]
+                fault_lost += float(fail_row.sum())
+                fail_row[:] = 0.0
+
         newf = order[bucket[slot]:bucket[slot + 1]]
+        if newf.size and tl is not None and not tl.clean:
+            ok = tl.inject_ok[wl.src[newf]]
+            if not ok.all():        # refused at the ingress: never a VOQ bit
+                fault_refused += float(f_size[newf[~ok]].sum())
+                newf = newf[ok]
         if newf.size:
             np.add.at(voq, pid[newf], f_size[newf])
             np.add.at(counters, (wl.src[newf], wl.dst[newf]), f_size[newf])
@@ -1621,27 +2094,114 @@ def _run_adaptive_case(case: AdaptiveCase, bits_per_slot: float,
             if san is not None:
                 injected_cum += float(f_size[newf].sum())
 
-        if slot < dark_until:       # reconfiguring: no circuits this slot
-            dark_slots += 1         # (dark slots serve nothing, so they
-            continue                # contribute zero disagreement and zero
-                                    # collision loss — one time base for
-                                    # both per-epoch metrics)
+        dark = plane_dark_until[fp.plane_map] > slot
+        if dark.all():              # every plane retargeting: nothing runs
+            dark_slots += 1         # (fully dark slots serve nothing, so
+            dark_plane_slots += float(dark.sum())
+            continue                # they contribute zero disagreement and
+                                    # zero collision loss — one time base
+                                    # for both per-epoch metrics)
+        if transition is not None and slot >= transition[3]:
+            transition = None
+
+        faulty = tl is not None and not tl.clean
+        if (not faulty and transition is None and not dark.any()
+                and fp.plans is not None):
+            # historical fast path, bit-identical to the pre-fault engine
+            dis_ep[slot // E] += fp.disagreement
+            ps = (slot - sched_t0) % fp.n_slots
+            coll_ep[slot // E] += fp.lost[ps]
+            spid, scap = fp.plans[ps]
+            q = voq[spid]
+            tx = np.minimum(q, scap)
+            voq[spid] = q - tx
+            delivered_ep[slot // E] += tx.sum()
+            credit.credit_pairs(spid, tx, slot)
+            continue
+
+        # --- degraded-service path: rebuild this slot from raw claims ---
+        dark_plane_slots += float(dark.sum())
         dis_ep[slot // E] += fp.disagreement
-        ps = (slot - sched_t0) % fp.n_slots
-        coll_ep[slot // E] += fp.lost[ps]
-        spid, scap = fp.plans[ps]
-        q = voq[spid]
-        tx = np.minimum(q, scap)
-        voq[spid] = q - tx
-        delivered_ep[slot // E] += tx.sum()
-        credit.credit_pairs(spid, tx, slot)
+        if transition is None:
+            dl = len(fp.plane_map)
+            lo = ((slot - sched_t0) % fp.n_slots) * dl
+            hi = min(lo + dl, fp.eff.shape[0])
+            rows = fp.eff[lo:hi]
+            planes = fp.plane_map[:hi - lo]
+            live = (plane_dark_until[planes] <= slot)[:, None]
+            nonself = fp.nonself[lo:hi]
+            if fp.win is not None:  # static arbitration, precomputed
+                win = fp.win[lo:hi]
+                lost_bits = float((nonself & live & ~win).sum()) * fp.w
+            else:                   # queue-aware: resolve on live VOQs
+                win, lost_claims = _resolve_slot_claims(
+                    rows, np.broadcast_to(live, rows.shape).copy(),
+                    planes, (lo + np.arange(hi - lo)) % n,
+                    case.collision, voq, n)
+                lost_bits = lost_claims * fp.w
+            served = win & nonself & live
+        else:
+            # mixed old/new activation: each node serves its own
+            # generation; contention between the generations on the same
+            # physical plane is re-arbitrated per slot
+            ofp, ot0, act, _ = transition
+            blocks = []
+            for p, t0 in ((ofp, ot0), (fp, sched_t0)):
+                dlp = len(p.plane_map)
+                lo = ((slot - t0) % p.n_slots) * dlp
+                hi = min(lo + dlp, p.eff.shape[0])
+                blocks.append((p.eff[lo:hi], p.plane_map[:hi - lo],
+                               (lo + np.arange(hi - lo)) % n))
+            rows = np.vstack([b[0] for b in blocks])
+            planes = np.concatenate([b[1] for b in blocks])
+            rot = np.concatenate([b[2] for b in blocks])
+            gen_new = np.zeros(len(rows), dtype=bool)
+            gen_new[len(blocks[0][0]):] = True
+            on = act <= slot
+            vmask = np.where(gen_new[:, None], on[None, :], ~on[None, :])
+            vmask &= (plane_dark_until[planes] <= slot)[:, None]
+            win, lost_claims = _resolve_slot_claims(
+                rows, vmask, planes, rot, case.collision, voq, n)
+            lost_bits = lost_claims * fp.w
+            nonself = rows != src0[None, :]
+            served = win & nonself
+        coll_ep[slot // E] += lost_bits
+
+        if faulty:                  # fault masking after arbitration: a
+            lok = tl.link_ok()      # dead claim still jams its port
+            txok = lok.T[planes]
+            rxok = lok[rows, planes[:, None]]
+            if case.repair:
+                pidb = src0[None, :] * n + rows
+                wanting = served & (voq[pidb] > 0.0)
+                np.add.at(plane_want, planes,
+                          wanting.sum(axis=1).astype(float))
+                np.add.at(plane_nack, planes,
+                          (wanting & ~(txok & rxok)).sum(axis=1)
+                          .astype(float))
+                np.add.at(rx_want, rows[wanting], 1.0)
+                np.add.at(rx_nack, rows[wanting & ~rxok], 1.0)
+            served &= txok & rxok
+
+        srr, sii = np.nonzero(served)
+        if srr.size:
+            spid, inv = np.unique(sii * n + rows[srr, sii],
+                                  return_inverse=True)
+            scap = np.bincount(inv).astype(np.float64) * fp.w
+            q = voq[spid]
+            tx = np.minimum(q, scap)
+            voq[spid] = q - tx
+            delivered_ep[slot // E] += tx.sum()
+            credit.credit_pairs(spid, tx, slot)
 
     if san is not None:
         delivered_all = float(delivered_ep.sum())
         san.check_conservation(injected_cum, delivered_all,
-                               float(voq.sum()),
+                               float(voq.sum()), fault_lost=fault_lost,
                                label="adaptive:final:conservation")
         rem, completed = credit.remaining_active()
+        # bits stranded by tor_fail stay on their never-completing flows
+        # inside remaining_active, so the closure needs no fault term
         san.check_credit_closure(injected_cum, delivered_all, rem,
                                  completed, label="adaptive:credit")
     ep_len = np.minimum(E, H - E * np.arange(n_epochs))
@@ -1653,6 +2213,8 @@ def _run_adaptive_case(case: AdaptiveCase, bits_per_slot: float,
         utilization=float(delivered_ep.sum()) / ideal,
         delivered_bits=float(delivered_ep.sum()),
         offered_bits=float(wl.size[valid].sum()),
+        fault_lost_bits=fault_lost,
+        fault_refused_bits=fault_refused,
     )
     return AdaptiveRow(
         label=case.label, policy=case.policy, result=result,
@@ -1663,7 +2225,12 @@ def _run_adaptive_case(case: AdaptiveCase, bits_per_slot: float,
         epoch_disagreement=dis_ep / ep_len,
         epoch_collision_loss=coll_ep / ep_cap,
         collision_lost_bits=float(coll_ep.sum()),
-        schedule_groups_max=groups_max)
+        schedule_groups_max=groups_max,
+        fault_lost_bits=fault_lost,
+        fault_refused_bits=fault_refused,
+        dark_plane_slots=dark_plane_slots,
+        excised_nodes=int((excised_tx | excised_rx).sum()),
+        excised_planes=int((~plane_alive).sum()))
 
 
 def run_adaptive(

@@ -1,0 +1,323 @@
+"""Fault injection and self-healing fabric operations: event validation,
+no-fault golden pins, the fault-loss ledger, queue-aware arbitration,
+per-plane dark windows, async activation, and the detection -> excision
+-> rebuild repair loop."""
+import numpy as np
+import pytest
+
+from repro.analysis.sanitize import SanitizeError, Sanitizer
+from repro.core.faults import (
+    FaultEvent,
+    FaultSchedule,
+    claims_fault_mask,
+)
+from repro.core.schedule import oblivious_schedule, planes_changed
+from repro.core.simulator import (
+    AdaptiveCase,
+    SweepCase,
+    _resolve_slot_claims,
+    phase_shifting_workload,
+    run_adaptive,
+    run_sweep,
+    simulate,
+)
+
+BPS = 100e9 * 4.5e-6
+RECFG = 1 / 9
+
+
+def _uniform(n=12, load=0.6, horizon=1200, d_hat=2, seed=3):
+    return phase_shifting_workload(
+        n, load, horizon, BPS, d_hat=d_hat, seed=seed,
+        phases=("uniform",))
+
+
+def _sched(n, d_hat):
+    return oblivious_schedule(n, d_hat=d_hat, recfg_frac=RECFG)
+
+
+# ---------------------------------------------------------------------------
+# Validation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("ev", [
+    FaultEvent(0, "gamma_ray"),                          # unknown kind
+    FaultEvent(-1, "plane_down", plane=0),               # negative slot
+    FaultEvent(0, "plane_down", plane=2),                # plane out of range
+    FaultEvent(0, "tor_fail", node=8),                   # node out of range
+    FaultEvent(0, "tor_fail"),                           # node required
+    FaultEvent(0, "plane_down", plane=0, node=3),        # node forbidden
+    FaultEvent(0, "tor_fail", node=1, plane=0),          # plane forbidden
+    FaultEvent(0, "link_flap", node=1, plane=0),         # duration required
+    FaultEvent(0, "tor_drain", node=1, duration=5),      # duration forbidden
+])
+def test_malformed_fault_events_raise(ev):
+    with pytest.raises(ValueError):
+        FaultSchedule((ev,)).validate(8, 2)
+
+
+def test_well_formed_fault_schedule_validates():
+    fs = FaultSchedule((
+        FaultEvent(10, "plane_down", plane=1),
+        FaultEvent(20, "plane_up", plane=1),
+        FaultEvent(30, "port_down", node=3, plane=0),
+        FaultEvent(40, "link_flap", node=2, plane=1, duration=7),
+        FaultEvent(50, "tor_drain", node=4),
+        FaultEvent(60, "tor_fail", node=5),
+    ))
+    fs.validate(8, 2)
+    assert bool(fs)
+    assert not FaultSchedule()
+
+
+def test_adaptive_case_rejects_malformed_configs():
+    wl = _uniform(horizon=600)
+    for kwargs in (
+        dict(gather_steps=wl.n),                  # > n - 1 ring steps
+        dict(activation_jitter_slots=-1),
+        dict(repair=True, policy="oblivious"),    # repair needs adaptive
+        dict(repair_after_epochs=0),
+        dict(swap_tv_threshold=-0.1),
+        dict(faults="plane_down"),                # not a FaultSchedule
+        dict(faults=FaultSchedule((FaultEvent(0, "tor_fail", node=99),))),
+    ):
+        with pytest.raises(ValueError):
+            AdaptiveCase(wl, 150, kwargs.pop("policy", "adaptive"),
+                         d_hat=2, recfg_frac=RECFG, **kwargs)
+    with pytest.raises(ValueError):
+        AdaptiveCase(wl, 0, "adaptive", d_hat=2)  # epoch_slots < 1
+
+
+def test_sweep_rejects_unsupported_fault_engines():
+    wl = _uniform(n=8, horizon=400)
+    fs = FaultSchedule((FaultEvent(10, "plane_down", plane=0),))
+    with pytest.raises(ValueError):
+        SweepCase(_sched(8, 2), wl, mode="rotorlb", faults=fs)
+    with pytest.raises(ValueError):
+        simulate(_sched(8, 2), wl, BPS, mode="rotorlb", faults=fs)
+    with pytest.raises(ValueError):
+        run_sweep([SweepCase(_sched(8, 2), wl, faults=fs)], BPS,
+                  backend="jax")
+
+
+# ---------------------------------------------------------------------------
+# No-fault golden pins (empty schedule must be bit-identical to None)
+# ---------------------------------------------------------------------------
+
+def test_empty_fault_schedule_golden_sweep_engine():
+    wl = _uniform(n=8, horizon=600)
+    sched = _sched(8, 2)
+    ref = simulate(sched, wl, BPS, sanitize=True)
+    r = simulate(sched, wl, BPS, sanitize=True, faults=FaultSchedule())
+    assert np.array_equal(r.fct_slots, ref.fct_slots)
+    assert r.delivered_bits == ref.delivered_bits
+    assert r.fault_lost_bits == 0.0 and r.fault_refused_bits == 0.0
+
+
+def test_empty_fault_schedule_golden_adaptive_engine():
+    wl = _uniform(horizon=900)
+    base = dict(d_hat=2, recfg_frac=RECFG, reconfig_penalty_slots=10)
+    ref = run_adaptive(
+        [AdaptiveCase(wl, 150, "adaptive", **base)], BPS, sanitize=True)[0]
+    row = run_adaptive(
+        [AdaptiveCase(wl, 150, "adaptive", faults=FaultSchedule(),
+                      activation_jitter_slots=0, **base)],
+        BPS, sanitize=True)[0]
+    assert np.array_equal(row.result.fct_slots, ref.result.fct_slots)
+    assert row.result.delivered_bits == ref.result.delivered_bits
+    assert row.dark_slots == ref.dark_slots
+    assert row.result.fault_lost_bits == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Degradation semantics and the fault-loss ledger
+# ---------------------------------------------------------------------------
+
+def test_plane_down_degrades_capacity_without_losing_bits():
+    wl = _uniform(n=8, horizon=900, load=0.8)
+    sched = _sched(8, 2)
+    clean = simulate(sched, wl, BPS, sanitize=True)
+    down = simulate(sched, wl, BPS, sanitize=True, faults=FaultSchedule(
+        (FaultEvent(100, "plane_down", plane=0),)))
+    healed = simulate(sched, wl, BPS, sanitize=True, faults=FaultSchedule(
+        (FaultEvent(100, "plane_down", plane=0),
+         FaultEvent(300, "plane_up", plane=0))))
+    # capacity-side fault: bits stay queued, none are ever lost
+    assert down.fault_lost_bits == 0.0 and down.fault_refused_bits == 0.0
+    assert down.delivered_bits < clean.delivered_bits
+    assert down.delivered_bits < healed.delivered_bits <= clean.delivered_bits
+
+
+def test_tor_drain_is_lossless_and_tor_fail_is_not():
+    wl = _uniform(n=8, horizon=900, load=0.6)
+    sched = _sched(8, 2)
+    drain = simulate(sched, wl, BPS, sanitize=True, faults=FaultSchedule(
+        (FaultEvent(300, "tor_drain", node=0),)))
+    fail = simulate(sched, wl, BPS, sanitize=True, faults=FaultSchedule(
+        (FaultEvent(300, "tor_fail", node=0),)))
+    # graceful drain: arrivals refused, every already-queued bit forwarded
+    assert drain.fault_lost_bits == 0.0
+    assert drain.fault_refused_bits > 0.0
+    # abrupt failure: the dead ToR's VOQ bits land on the explicit ledger
+    assert fail.fault_lost_bits > 0.0
+    assert fail.fault_refused_bits >= drain.fault_refused_bits
+
+
+def test_sanitizer_catches_unaccounted_fault_loss():
+    san = Sanitizer()
+    san.check_conservation(100.0, 60.0, 20.0, fault_lost=20.0)
+    with pytest.raises(SanitizeError):
+        # the same books without the fault ledger no longer close
+        san.check_conservation(100.0, 60.0, 20.0)
+
+
+def test_claims_fault_mask_masks_both_endpoints():
+    link_ok = np.ones((4, 2), dtype=bool)
+    link_ok[3, :] = False                       # node 3 fully dark
+    claims = np.array([[1, 0, 3, 2], [2, 3, 0, 1]])
+    m = claims_fault_mask(claims, link_ok)
+    # tx side: input 3 dark on both planes; rx side: anyone tuned to 3
+    assert not m[0, 3] and not m[0, 2]          # 2 -> 3 and 3 -> 2 dark
+    assert not m[1, 1] and not m[1, 3]
+    assert m[0, 0] and m[0, 1] and m[1, 0] and m[1, 2]
+    # plane_map redirects a logical row to its physical plane's state
+    link_ok2 = np.ones((4, 2), dtype=bool)
+    link_ok2[0, 1] = False
+    m2 = claims_fault_mask(claims[:1], link_ok2, plane_map=np.array([1]))
+    assert not m2[0, 0] and not m2[0, 1]        # 0 -> 1 and 1 -> 0 on plane 1
+
+
+def test_planes_changed_flags_only_differing_planes():
+    rng = np.random.default_rng(0)
+    old = rng.integers(0, 6, size=(12, 6))
+    new = old.copy()
+    assert not planes_changed(old, new, 3).any()
+    new[1::3] = (new[1::3] + 1) % 6             # perturb plane 1's rows only
+    ch = planes_changed(old, new, 3)
+    assert ch.tolist() == [False, True, False]
+    # shape mismatch (schedule length changed) -> conservatively all dark
+    assert planes_changed(old[:6], new, 3).all()
+
+
+# ---------------------------------------------------------------------------
+# Queue-aware ("fullest") arbitration
+# ---------------------------------------------------------------------------
+
+def test_fullest_arbiter_grants_deepest_voq():
+    n = 4
+    claims = np.array([[2, 2, 3, 3]])           # inputs 0,1 claim port 2;
+    valid = np.ones((1, n), dtype=bool)         # 2,3 claim port 3 (3 self)
+    planes = np.array([0])
+    rot = np.array([0])
+    voq = np.zeros(n * n)
+    voq[0 * n + 2], voq[1 * n + 2] = 5.0, 9.0   # input 1 is deeper to port 2
+    voq[2 * n + 3] = 4.0
+    win, lost = _resolve_slot_claims(claims, valid, planes, rot,
+                                     "fullest", voq, n)
+    assert win[0].tolist() == [False, True, True, False]
+    assert lost == 1                            # nonself loser: input 0
+    win_d, lost_d = _resolve_slot_claims(claims, valid, planes, rot,
+                                         "drop", voq, n)
+    assert not win_d.any() and lost_d == 3
+
+
+def test_fullest_collision_mode_runs_closed_loop():
+    wl = phase_shifting_workload(
+        12, 0.5, 1200, BPS, d_hat=2, seed=1,
+        phases=("permutation", "uniform"), shift_period=400)
+    rows = run_adaptive(
+        [AdaptiveCase(wl, 150, "adaptive", d_hat=2, recfg_frac=RECFG,
+                      gather_steps=2, collision=c, label=c)
+         for c in ("drop", "fullest")],
+        BPS, sanitize=True)
+    by = {r.label: r for r in rows}
+    # queue-aware arbitration turns contested ports into one winner each;
+    # the arbitration-free fabric recovers none of them
+    assert (by["fullest"].result.delivered_bits
+            > by["drop"].result.delivered_bits)
+    assert by["fullest"].collision_lost_bits > 0.0
+
+
+# ---------------------------------------------------------------------------
+# Per-plane dark windows, hysteresis, and async activation
+# ---------------------------------------------------------------------------
+
+def test_full_swap_darkens_every_plane():
+    wl = _uniform(horizon=1200)
+    row = run_adaptive(
+        [AdaptiveCase(wl, 150, "adaptive", d_hat=2, recfg_frac=RECFG,
+                      reconfig_penalty_slots=15)], BPS, sanitize=True)[0]
+    # fresh-seeded rebuilds change every plane, so each fabric-wide dark
+    # slot charges all d_hat planes
+    assert row.dark_slots > 0
+    assert row.dark_plane_slots == row.dark_slots * 2
+
+
+def test_swap_hysteresis_suppresses_churn_on_stationary_traffic():
+    wl = _uniform(load=0.8, horizon=2400)
+    base = dict(d_hat=2, recfg_frac=RECFG, reconfig_penalty_slots=15)
+    rows = run_adaptive(
+        [AdaptiveCase(wl, 150, "adaptive", label="churn", **base),
+         AdaptiveCase(wl, 150, "adaptive", swap_tv_threshold=0.9,
+                      label="hyst", **base)],
+        BPS, sanitize=True)
+    by = {r.label: r for r in rows}
+    assert by["churn"].recomputes > by["hyst"].recomputes
+    assert by["hyst"].dark_plane_slots < by["churn"].dark_plane_slots
+
+
+def test_activation_jitter_keeps_books_closed():
+    wl = _uniform(load=0.7, horizon=1200)
+    base = dict(d_hat=2, recfg_frac=RECFG)
+    sync = run_adaptive(
+        [AdaptiveCase(wl, 150, "adaptive", **base)], BPS, sanitize=True)[0]
+    jit = run_adaptive(
+        [AdaptiveCase(wl, 150, "adaptive", activation_jitter_slots=40,
+                      **base)],
+        BPS, sanitize=True)[0]
+    # mixed-generation slots re-arbitrate dynamically; conservation holds
+    # (sanitize=True) and throughput stays in the same regime
+    assert jit.result.utilization > 0.0
+    assert abs(jit.result.utilization - sync.result.utilization) < 0.2
+
+
+# ---------------------------------------------------------------------------
+# Detection, excision, and self-healing rebuild
+# ---------------------------------------------------------------------------
+
+def _fault_cases(fs, horizon=2400, n=12):
+    wl = phase_shifting_workload(
+        n, 0.95, horizon, BPS, d_hat=3, seed=1, phases=("uniform",),
+        shift_period=horizon)
+    base = dict(d_hat=3, recfg_frac=RECFG, gather_steps=n - 1,
+                reconfig_penalty_slots=30, faults=fs)
+    return [
+        AdaptiveCase(wl, 150, "adaptive", repair=True,
+                     swap_tv_threshold=0.3, label="repair", **base),
+        AdaptiveCase(wl, 150, "adaptive", label="blind", **base),
+    ]
+
+
+def _post_fault_util(row, fault_epoch):
+    return float(np.mean(row.epoch_utilization[fault_epoch + 2:]))
+
+
+def test_plane_down_repair_excises_and_recovers_above_blind():
+    fs = FaultSchedule((FaultEvent(900, "plane_down", plane=0),))
+    rows = run_adaptive(_fault_cases(fs), BPS, sanitize=True)
+    by = {r.label: r for r in rows}
+    rep, bli = by["repair"], by["blind"]
+    assert rep.excised_planes == 1              # dead plane inferred + cut
+    assert bli.excised_planes == 0
+    assert rep.result.fault_lost_bits == 0.0    # capacity fault, no loss
+    assert _post_fault_util(rep, 6) > _post_fault_util(bli, 6)
+
+
+def test_tor_fail_repair_excises_node_and_ledger_closes():
+    fs = FaultSchedule((FaultEvent(900, "tor_fail", node=3),))
+    rows = run_adaptive(_fault_cases(fs), BPS, sanitize=True)
+    by = {r.label: r for r in rows}
+    assert by["repair"].excised_nodes >= 1
+    for row in rows:                            # sanitized: ledger closed
+        assert row.result.fault_lost_bits > 0.0
+        assert row.result.fault_refused_bits > 0.0
