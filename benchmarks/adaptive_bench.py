@@ -19,7 +19,13 @@ oracle's utilization, and the stale schedule degrades after a shift.
 ``run_disagreement()`` sweeps gather staleness -> per-node schedule
 disagreement -> utilization (every ToR schedules from its own partial
 view; output-port collisions resolved per ``AdaptiveCase.collision``),
-and ``--smoke`` runs its smallest grid as a CI guard.
+and ``--smoke`` runs its smallest grid as a CI guard (``--backend jax``
+pushes the smoke grid through the jitted engine instead).
+
+``run_jax_speedup()`` times the numpy engine against the jitted jax
+engine on the full disagreement grid (interleaved reps, min-of-N) and
+cross-checks per-case utilization; the full suite persists it under
+``BENCH_adaptive.json["jax_adaptive"]``.
 
 ``run_faults()`` sweeps fault type x severity x policy on both a
 stationary train and the shifting phase train: adaptive-with-repair
@@ -35,6 +41,7 @@ reduced grid as a CI guard.
 from __future__ import annotations
 
 import argparse
+import time
 
 import numpy as np
 
@@ -136,6 +143,7 @@ def run_disagreement(n: int = 16, d_hat: int = 4, load: float = 0.5,
                      steps_grid: tuple[int, ...] | None = None,
                      collisions: tuple[str, ...] = ("drop", "lowest",
                                                     "receiver", "fullest"),
+                     backend: str = "numpy",
                      ) -> list[AdaptiveRow]:
     """Gather staleness -> schedule disagreement -> utilization.
 
@@ -158,7 +166,7 @@ def run_disagreement(n: int = 16, d_hat: int = 4, load: float = 0.5,
                      meta={"gather_steps": s, "collision": c})
         for c in collisions for s in steps_grid
     ]
-    return run_adaptive(cases, BITS_PER_SLOT)
+    return run_adaptive(cases, BITS_PER_SLOT, backend=backend)
 
 
 def run_epoch_tradeoff(n: int = 16, d_hat: int = 4, load: float = 0.5,
@@ -331,14 +339,16 @@ def _print_disagreement(rows: list[AdaptiveRow]) -> None:
     print(f"# staleness -> disagreement -> utilization (drop): {trail}")
 
 
-def smoke(n: int = 8) -> list[AdaptiveRow]:
+def smoke(n: int = 8, backend: str = "numpy") -> list[AdaptiveRow]:
     """Smallest-grid disagreement sweep for CI: exercises the per-node
     control plane, both extreme staleness points, and two collision modes
-    in a few seconds, so the benchmark entry points cannot rot."""
+    in a few seconds, so the benchmark entry points cannot rot.
+    ``backend="jax"`` runs the same grid through the jitted engine (CI's
+    jax job uses this to keep the scan path and its FCT replay honest)."""
     rows = run_disagreement(
         n=n, d_hat=2, load=0.4, horizon=600, shift_period=300,
         epoch_slots=150, steps_grid=(n - 1, 2),
-        collisions=("drop", "lowest"))
+        collisions=("drop", "lowest"), backend=backend)
     _print_disagreement(rows)
     full = [r for r in rows if r.meta["gather_steps"] == n - 1]
     partial = [r for r in rows if r.meta["gather_steps"] == 2]
@@ -347,6 +357,101 @@ def smoke(n: int = 8) -> list[AdaptiveRow]:
     print("# smoke: ok (consistent baseline clean, partial gather "
           "disagrees and loses capacity)")
     return rows
+
+
+def run_jax_speedup(n: int = 16, d_hat: int = 4, load: float = 0.5,
+                    horizon: int = 6000, shift_period: int = 2000,
+                    epoch_slots: int = 250, seed: int = 1,
+                    steps_grid: tuple[int, ...] | None = None,
+                    reps: int = 3) -> dict:
+    """Wall-clock comparison of the two adaptive engines on the
+    disagreement sweep (the PR's acceptance grid).
+
+    Runs the full staleness x collision grid — ``fullest`` excluded, it is
+    a numpy-only resolution mode — through both engines, interleaved, and
+    reports cold (first jax call: includes jit trace + compile) and warm
+    (traces cached) wall clock.  The headline ``speedup`` is
+    min(numpy)/min(warm jax) over ``reps`` interleaved repetitions:
+    min-of-N filters scheduler noise on a shared box, and interleaving
+    makes any drift hit both engines alike.  Per-case utilization is
+    cross-checked between backends (the parity tests pin bit equality;
+    here we record the observed max abs diff), and the per-flow FCT
+    percentiles come from the jax rows — the point of the port is that
+    the jitted engine emits real per-flow FCTs, not just aggregates.
+    """
+    if steps_grid is None:
+        steps_grid = (n - 1, n // 2, n // 4, 2)
+    collisions = ("drop", "lowest", "receiver")
+    wl = phase_shifting_workload(
+        n, load, horizon, BITS_PER_SLOT, d_hat=d_hat, seed=seed,
+        phases=PHASES, shift_period=shift_period)
+
+    def grid() -> list[AdaptiveCase]:
+        return [
+            AdaptiveCase(wl=wl, epoch_slots=epoch_slots, policy="adaptive",
+                         d_hat=d_hat, recfg_frac=RECFG, seed=seed, alpha=0.5,
+                         gather_steps=s, collision=c, label=f"steps{s}-{c}",
+                         meta={"gather_steps": s, "collision": c})
+            for c in collisions for s in steps_grid
+        ]
+
+    t0 = time.perf_counter()
+    jax_rows = run_adaptive(grid(), BITS_PER_SLOT, backend="jax")
+    jax_cold = time.perf_counter() - t0
+    np_s: list[float] = []
+    jax_s: list[float] = []
+    np_rows = None
+    for _ in range(max(reps, 1)):
+        t0 = time.perf_counter()
+        jax_rows = run_adaptive(grid(), BITS_PER_SLOT, backend="jax")
+        jax_s.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        np_rows = run_adaptive(grid(), BITS_PER_SLOT, backend="numpy")
+        np_s.append(time.perf_counter() - t0)
+
+    rows = []
+    max_diff = 0.0
+    for jr, nr in zip(jax_rows, np_rows):
+        max_diff = max(max_diff, abs(jr.result.utilization
+                                     - nr.result.utilization))
+        rows.append({
+            "label": jr.label,
+            "util_numpy": nr.result.utilization,
+            "util_jax": jr.result.utilization,
+            "p50_short": jr.result.fct_percentile(50, short_cutoff=SHORT),
+            "p99_short": jr.result.fct_percentile(99, short_cutoff=SHORT),
+        })
+    numpy_min, jax_warm = min(np_s), min(jax_s)
+    return {
+        "n": n,
+        "cases": len(rows),
+        "reps": reps,
+        "numpy_s": numpy_min,
+        "jax_cold_s": jax_cold,
+        "jax_warm_s": jax_warm,
+        "speedup_cold": numpy_min / jax_cold,
+        "speedup_warm": numpy_min / jax_warm,
+        "speedup": numpy_min / jax_warm,
+        "max_util_abs_diff": max_diff,
+        "rows": rows,
+    }
+
+
+def _print_jax_speedup(sp: dict) -> None:
+    print(f"adaptive_jax[sweep],{sp['jax_warm_s'] * 1e6:.0f},"
+          f"numpy_s={sp['numpy_s']:.2f};jax_cold_s={sp['jax_cold_s']:.2f};"
+          f"jax_warm_s={sp['jax_warm_s']:.2f};"
+          f"speedup={sp['speedup']:.2f};"
+          f"max_util_diff={sp['max_util_abs_diff']:.2e}")
+    for row in sp["rows"]:
+        print(f"adaptive_jax[{row['label']}],,"
+              f"util={row['util_jax']:.3f};"
+              f"p50short={row['p50_short']:.0f};"
+              f"p99short={row['p99_short']:.0f}")
+    print(f"# jax adaptive: {sp['cases']} cases, warm speedup "
+          f"{sp['speedup']:.2f}x over numpy (min of {sp['reps']} "
+          f"interleaved reps; want >= 5), utils agree to "
+          f"{sp['max_util_abs_diff']:.1e}")
 
 
 def main(argv: list[str] | None = None):
@@ -361,6 +466,9 @@ def main(argv: list[str] | None = None):
     ap.add_argument("--shift-period", type=int, default=1000)
     ap.add_argument("--epoch-slots", type=int, default=150)
     ap.add_argument("--seed", type=int, default=1)
+    ap.add_argument("--backend", choices=("numpy", "jax"), default="numpy",
+                    help="adaptive engine for the smoke grid (the full "
+                         "suite always times both in run_jax_speedup)")
     ap.add_argument("--smoke", action="store_true",
                     help="run the smallest grid of the selected section "
                          "(default: the disagreement sweep) and exit")
@@ -374,7 +482,7 @@ def main(argv: list[str] | None = None):
         _print_faults(faults)
         return faults
     if args.smoke:
-        smoke()
+        smoke(backend=args.backend)
         return None
 
     rows = run(args.n, args.d_hat, args.load, args.horizon,
@@ -441,9 +549,16 @@ def main(argv: list[str] | None = None):
     disagree = run_disagreement()
     _print_disagreement(disagree)
 
+    try:
+        jax_speedup = run_jax_speedup()
+        _print_jax_speedup(jax_speedup)
+    except ImportError:                              # no jax on this box
+        jax_speedup = None
+        print("# jax adaptive: skipped (jax not installed)")
+
     faults = run_faults()
     _print_faults(faults)
-    return rows, charged, tradeoff, disagree, faults
+    return rows, charged, tradeoff, disagree, faults, jax_speedup
 
 
 if __name__ == "__main__":

@@ -4,8 +4,10 @@ websearch workload, 5%..70% load, all systems.
 The whole load x system grid goes through :func:`repro.core.simulator.run_sweep`
 in one call — single-hop systems advance through the sparse batched engine,
 rotorlb/vlb through the dense-relay engine.  ``--backend jax`` runs the same
-grid through the jitted lax.scan kernels (aggregates only — FCT columns go
-nan).  ``main`` also prints a before/after timing table against the
+grid through the jitted lax.scan kernels (``singlehop`` / ``twohop_fct``),
+which emit real per-flow FCTs — every column, including the percentiles and
+``done``, is populated on both backends.  ``main`` also prints a
+before/after timing table against the
 pre-vectorization reference engine (``--no-timing`` skips it; ``--timing-n``
 sets the node count, default 64).  :func:`twohop_table` times the two-hop
 relay engine numpy-vs-jax per (n, mode) with min-of-N wall clocks — the rows
@@ -77,10 +79,7 @@ def run(n: int = 16, d_hat: int = 4, horizon: int = 4000,
             "p99_long": r.fct_percentile(99, long_cutoff=LONG),
             "p50_short": r.fct_percentile(50, short_cutoff=SHORT),
             "util": r.utilization,
-            # the jax backend tracks aggregates only: completed_frac over
-            # its all-inf fct_slots would read 0.0 (a completion collapse
-            # that never happened) — report nan like the FCT columns
-            "done": float("nan") if backend == "jax" else r.completed_frac,
+            "done": r.completed_frac,
             "hops": r.avg_hops,
             "us": sr.sim_s * 1e6,
         })
@@ -96,7 +95,9 @@ def twohop_table(ns=(32, 64, 128, 256), d_hat: int = 2, horizon: int = 300,
     min-of-N excludes compilation; the numpy engine has no compile to
     exclude.  Rows feed ``results/BENCH_twohop.json`` (the cross-PR perf
     trajectory for the relay data plane).  Skips the jax rows (with a
-    note) when jax is not installed.
+    note) when jax is not installed; otherwise ends with the jit
+    compile-cache counters (one trace per shape bucket — a hit count far
+    below the call count would mean the kernels are retracing).
     """
     try:
         import jax  # noqa: F401
@@ -141,6 +142,13 @@ def twohop_table(ns=(32, 64, 128, 256), d_hat: int = 2, horizon: int = 300,
                       f"speedup={speedup:.1f}x;"
                       f"util={row.result.utilization:.3f};"
                       f"hops={row.result.avg_hops:.2f}")
+    if have_jax:
+        from repro.core.simulator import compile_cache_stats
+        for kern, st in compile_cache_stats().items():
+            if st["calls"]:
+                print(f"# compile_cache[{kern}]: traces={st['traces']} "
+                      f"calls={st['calls']} hits={st['hits']} "
+                      f"shapes={st['shape_buckets']}")
     return rows
 
 

@@ -15,9 +15,11 @@ Persists the perf trajectory for cross-PR tracking:
   - results/BENCH_adaptive.json — closed-loop utilization, with and
     without construction charging, the epoch-length x
     reconfiguration-penalty tradeoff grid, the gather-staleness ->
-    schedule-disagreement -> utilization sweep, and the fault-injection
+    schedule-disagreement -> utilization sweep, the fault-injection
     recovery sweep (fault type x severity x policy, with per-epoch
-    utilization recovery curves)
+    utilization recovery curves), and the ``jax_adaptive`` engine
+    comparison (numpy vs jitted jax wall-clock on the disagreement grid,
+    with per-flow FCT percentiles from the jax rows)
   - results/BENCH_twohop.json — two-hop relay engine wall-clock per
     (n, mode, backend), numpy vs jax (min-of-N)
 """
@@ -75,7 +77,7 @@ def main() -> None:
     sys.stdout.flush()
 
     (adaptive_rows, charged_rows, tradeoff_rows,
-     disagreement_rows, fault_rows) = adaptive_bench.main([])
+     disagreement_rows, fault_rows, jax_speedup) = adaptive_bench.main([])
     sys.stdout.flush()
 
     twohop_rows = fct_bench.twohop_table()
@@ -95,6 +97,7 @@ def main() -> None:
         "epoch_tradeoff": [_adaptive_row_json(r) for r in tradeoff_rows],
         "disagreement": [_adaptive_row_json(r) for r in disagreement_rows],
         "faults": [_adaptive_row_json(r) for r in fault_rows],
+        "jax_adaptive": jax_speedup,
     }, indent=2) + "\n")
     (RESULTS / "BENCH_twohop.json").write_text(
         json.dumps(twohop_rows, indent=2) + "\n")

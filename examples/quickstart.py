@@ -55,9 +55,9 @@ def main():
     print(f"  rotorlb  : p99short={ro.fct_percentile(99, short_cutoff=8e5):.0f} "
           f"slots util={ro.utilization:.3f} hops={ro.avg_hops:.2f}")
     # run_sweep(backend="jax") runs the same grid — every mode, incl. the
-    # two-hop relays — through jitted lax.scan kernels: aggregates only
-    # (utilization / delivered bits / avg_hops; FCTs stay on numpy), and
-    # several times faster at large n.  Needs the `jax` extra installed.
+    # two-hop relays — through jitted lax.scan kernels, emitting the full
+    # result including per-flow FCTs (bit-matching numpy on the golden
+    # cases), several times faster at large n.  Needs the `jax` extra.
     try:
         import jax  # noqa: F401
     except ImportError:
@@ -144,6 +144,30 @@ def main():
               f"post-fault={post:.3f} "
               f"excised_planes={rf.excised_planes} "
               f"fault_lost={rf.result.fault_lost_bits:.2e}")
+
+    print("=== 8. The adaptive loop on the jax backend ===")
+    # the whole closed loop — estimation, per-node schedule construction,
+    # hot swaps, collisions — compiles each case's control trace to a
+    # device plan and replays the slots through one jitted lax.scan; the
+    # per-flow credit replay then recovers every flow's completion slot,
+    # so FCT percentiles come out of the jitted engine too, bit-matching
+    # the numpy loop above (and ~5x faster on full sweep grids)
+    try:
+        import jax  # noqa: F401
+    except ImportError:
+        print("  (pip install the [jax] extra for "
+              "run_adaptive(backend='jax'))")
+    else:
+        ja = run_adaptive(
+            [AdaptiveCase(wp, 200, "adaptive", d_hat=d_hat,
+                          recfg_frac=recfg, alpha=0.5, gather_steps=n // 4,
+                          collision="lowest", label="jax-adaptive")],
+            bits_per_slot, backend="jax")[0]
+        f = ja.result.fct_slots
+        print(f"  jax adaptive: util={ja.result.utilization:.3f} "
+              f"p50={ja.result.fct_percentile(50):.0f} "
+              f"p99={ja.result.fct_percentile(99):.0f} slots "
+              f"({np.isfinite(f).sum()} of {len(f)} flows completed)")
 
 
 if __name__ == "__main__":

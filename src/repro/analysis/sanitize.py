@@ -305,14 +305,17 @@ class Sanitizer:
 
     def check_credit_closure(self, injected: float, delivered: float,
                              remaining_active: float, completed: int,
-                             label: str = "credit") -> None:
+                             label: str = "credit",
+                             float32: bool = False) -> None:
         """Processor-sharing credit closure: bits credited to flows
         (injected - remaining on active flows) match bits the data plane
         delivered.  Completed flows may each strand up to the tracker's
-        1e-6-bit completion threshold, hence the per-completion slack."""
+        1e-6-bit completion threshold, hence the per-completion slack.
+        ``float32``: the delivered amounts came from an f32 device scan
+        (the jax engines) — widen to the f32 relative budget."""
         self._ran("credit")
         credited = injected - remaining_active
-        tol = self._tol(injected) + 2e-6 * (completed + 1)
+        tol = self._tol(injected, float32=float32) + 2e-6 * (completed + 1)
         if abs(credited - delivered) > tol:
             self._fail(label,
                        f"flow credit does not close: credited "

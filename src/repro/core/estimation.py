@@ -28,8 +28,10 @@ __all__ = [
     "TrafficEstimator",
     "allgather_rows",
     "dequantize",
+    "dequantize_jax",
     "estimate_all_views",
     "estimate_global_matrix",
+    "fleet_update_quantize_jax",
     "quantize_row",
     "ring_all_views",
     "ring_leader_view",
@@ -299,3 +301,67 @@ def estimate_all_views(
     views = ring_all_views(rows, steps=steps)
     return RingViews(rows=dequantize(views.rows, k, bits_per_slot),
                      have=views.have)
+
+
+# ---------------------------------------------------------------------------
+# Jittable estimation ops (device-side counterpart of the fleet pipeline)
+# ---------------------------------------------------------------------------
+
+# jit once per process, same compile-cache discipline as the simulator
+# kernels: the op bodies trace once per input shape, after which repeated
+# epoch rounds reuse the compiled executables.
+_EST_JAX_FNS: dict[str, "callable"] = {}
+
+
+def _est_jax_fns() -> dict:
+    if _EST_JAX_FNS:
+        return _EST_JAX_FNS
+    import jax
+    import jax.numpy as jnp
+
+    def fleet_update_quantize(ewma, period_bits, alpha, k_scale):
+        # one fused op for the whole fleet: EWMA fold + A1 quantization
+        # (normalize, floor, 16-bit saturate), batched over all n rows
+        new_ewma = (1.0 - alpha) * ewma + alpha * period_bits
+        q = jnp.clip(jnp.floor(new_ewma * k_scale), 0.0, 65535.0)
+        return new_ewma, q.astype(jnp.uint16)
+
+    def deq(q, unit):
+        return q.astype(jnp.float32) * unit
+
+    _EST_JAX_FNS.update(
+        fleet_update_quantize=jax.jit(fleet_update_quantize),
+        dequantize=jax.jit(deq),
+    )
+    return _EST_JAX_FNS
+
+
+def fleet_update_quantize_jax(
+    ewma: np.ndarray, period_bits: np.ndarray, alpha: float, k: int,
+    bits_per_slot: float,
+):
+    """Jitted fleet round: fold one period's counters into the (n, n) fleet
+    EWMA and quantize every row (A1/A2 fused), on the accelerator.
+
+    The f32 device counterpart of ``TrafficEstimator.update`` +
+    :func:`quantize_row`; quantized outputs match the numpy pipeline
+    exactly wherever the f32 normalization lands on the same side of the
+    floor (pinned on integer-friendly grids in the jax parity tests).
+    Returns ``(new_ewma, quantized_uint16)`` as jax arrays so repeated
+    epoch rounds can keep the EWMA state device-resident.
+    """
+    _check_k(k)
+    fns = _est_jax_fns()
+    k_scale = np.float32(((k - 1) / k) / bits_per_slot)
+    return fns["fleet_update_quantize"](
+        np.asarray(ewma, dtype=np.float32),
+        np.asarray(period_bits, dtype=np.float32),
+        np.float32(alpha), k_scale)
+
+
+def dequantize_jax(q, k: int, bits_per_slot: float):
+    """Jitted counterpart of :func:`dequantize` (f32 device scale)."""
+    _check_k(k)
+    fns = _est_jax_fns()
+    unit = np.float32(bits_per_slot * k / (k - 1))
+    return fns["dequantize"](q, unit)

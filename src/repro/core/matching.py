@@ -36,6 +36,7 @@ __all__ = [
     "extract_perfect_matching",
     "decompose_matchings",
     "decompose_matchings_euler",
+    "decompose_matchings_euler_batch",
 ]
 
 
@@ -228,7 +229,7 @@ _CHUNK_ELEMS = 65536      # depth-first recursion piece size (L2-resident)
 
 
 def _decompose_stubs(ev: np.ndarray, byr: np.ndarray, n: int, d: int,
-                     out: list[np.ndarray]) -> None:
+                     out: list, mid: np.ndarray | None = None) -> None:
     """Batched level-wise Euler decomposition of uniform-degree stub arrays.
 
     Physical layout invariant: edges sorted by (subproblem, src, dst), each
@@ -243,6 +244,15 @@ def _decompose_stubs(ev: np.ndarray, byr: np.ndarray, n: int, d: int,
     recursion goes depth-first on cache-sized halves (subproblem-aligned):
     all remaining levels of a piece run on L2-resident arrays, which on a
     memory-bound box is worth ~2x over breadth-first whole-array sweeps.
+
+    ``mid`` optionally tags each subproblem with an originating-matrix id
+    (several *independent* regular matrices stacked as sibling subproblems
+    share one cascade); ``out`` then receives ``(perms, mid)`` pairs whose
+    rows can be routed back per matrix.  Every color decision compares
+    orbit labels confined to one subproblem's positions, so stacking only
+    shifts those positions uniformly and each matrix's split is
+    bit-identical to a solo run.  With ``mid=None`` plain perm arrays are
+    appended (the historical single-matrix contract).
     """
     ev = ev.astype(np.int32, copy=False)
     byr = byr.astype(np.int32, copy=False)
@@ -250,8 +260,10 @@ def _decompose_stubs(ev: np.ndarray, byr: np.ndarray, n: int, d: int,
         S = len(ev) // (n * d)
         if len(ev) > _CHUNK_ELEMS and S >= 2:
             h = (S // 2) * n * d
-            _decompose_stubs(ev[:h], byr[:h], n, d, out)
-            _decompose_stubs(ev[h:], byr[h:] - np.int32(h), n, d, out)
+            _decompose_stubs(ev[:h], byr[:h], n, d, out,
+                             None if mid is None else mid[:S // 2])
+            _decompose_stubs(ev[h:], byr[h:] - np.int32(h), n, d, out,
+                             None if mid is None else mid[S // 2:])
             return
         if d % 2 == 1:
             eu = np.tile(np.repeat(np.arange(n), d), S)
@@ -259,7 +271,7 @@ def _decompose_stubs(ev: np.ndarray, byr: np.ndarray, n: int, d: int,
             perms, pos = _extract_matchings_alon(ev=ev.astype(np.int64),
                                                  eu=eu, sub=sub,
                                                  n=n, d=d, S=S)
-            out.append(perms)
+            out.append(perms if mid is None else (perms, mid.copy()))
             keep = np.ones(len(ev), dtype=bool)
             keep[pos] = False
             newidx = (np.cumsum(keep, dtype=np.int64) - 1).astype(np.int32)
@@ -295,8 +307,12 @@ def _decompose_stubs(ev: np.ndarray, byr: np.ndarray, n: int, d: int,
         byr_new[destb] = np.take(dest, byr, mode="clip")
         ev, byr = ev_new, byr_new
         d //= 2
+        if mid is not None:
+            # block s split in place into halves -> new subs 2s, 2s + 1
+            mid = np.repeat(mid, 2)
     if d == 1:
-        out.append(ev.reshape(-1, n).astype(np.int64))
+        perms = ev.reshape(-1, n).astype(np.int64)
+        out.append(perms if mid is None else (perms, mid))
 
 
 def decompose_matchings_euler(
@@ -317,45 +333,100 @@ def decompose_matchings_euler(
     post-peel regularity is odd); odd regularity at deeper levels is
     resolved matching-free (see :func:`_extract_matchings_alon`).
     """
-    e = np.asarray(e, dtype=np.int64)
-    if not is_regular(e):
-        raise ValueError("matrix is not regular")
-    d = int(e.sum(axis=1)[0])
-    n = e.shape[0]
-    out: list[np.ndarray] = []
+    return decompose_matchings_euler_batch([e], known=known)[0]
+
+
+def decompose_matchings_euler_batch(
+    es, known: np.ndarray | None = None
+) -> list[np.ndarray]:
+    """Decompose a batch of same-shape regular matrices in ONE stub cascade.
+
+    Independent matrices ride the Euler split as sibling subproblems of a
+    single :func:`_decompose_stubs` call, amortizing the trail labelings,
+    flat O(E) passes, and numpy dispatch across the batch — the dominant
+    construction cost of the per-node control plane, where every epoch
+    decomposes up to n same-regularity view matrices.  ``known`` (M, n) is
+    peeled from *every* matrix.  Each matrix's matching multiset is
+    bit-identical to its solo :func:`decompose_matchings_euler` run (the
+    color decisions compare orbit labels confined to one subproblem, so
+    batching only shifts them uniformly); a batch of one is the solo call.
+    Matrices whose post-peel regularity differs (or that finish before the
+    cascade) are handled individually, so mixed batches stay correct.
+    """
+    es = [np.asarray(e, dtype=np.int64) for e in es]
+    if not es:
+        return []
+    n = es[0].shape[0]
+    if any(e.shape != (n, n) for e in es):
+        raise ValueError("batch matrices must share shape")
     if known is not None and len(known):
         known = np.asarray(known, dtype=np.int64)
-        rest = e.copy()
-        np.add.at(rest, (np.tile(np.arange(n), len(known)), known.reshape(-1)),
-                  -1)
-        if (rest < 0).any():
-            raise ValueError("known matchings are not contained in e")
-        out.append(known)
-        e = rest
-        d -= len(known)
-    if d == 0:
-        return (np.concatenate(out) if out
-                else np.empty((0, n), dtype=np.int64))
-    if n == 1:
-        out.append(np.zeros((d, 1), dtype=np.int64))
-        return np.concatenate(out)
-    ui, vi = np.nonzero(e)
-    mult = e[ui, vi]
-    eu = np.repeat(ui, mult)
-    ev = np.repeat(vi, mult)
-    if d % 2 == 1 and d > 1:
-        # the one permitted Hopcroft-Karp peel: evens the top regularity
-        perm = extract_perfect_matching(e)
-        out.append(perm[None, :])
-        key = eu * n + ev                          # sorted (construction)
-        pos = np.searchsorted(key, np.arange(n) * n + perm)
-        keep = np.ones(len(eu), dtype=bool)
-        keep[pos] = False
-        eu, ev = eu[keep], ev[keep]
-        d -= 1
-    if d == 1:
-        out.append(ev[None, :])
-        return np.concatenate(out)
-    byr = np.argsort(ev.astype(np.int64) * n + eu, kind="stable")
-    _decompose_stubs(ev, byr, n, d, out)
-    return np.concatenate(out)
+    else:
+        known = None
+    results: list = [None] * len(es)
+    pend = []                     # (g, head, eu, ev, d) awaiting the cascade
+    for g, e in enumerate(es):
+        if not is_regular(e):
+            raise ValueError("matrix is not regular")
+        d = int(e.sum(axis=1)[0])
+        head: list[np.ndarray] = []
+        if known is not None:
+            rest = e.copy()
+            np.add.at(rest,
+                      (np.tile(np.arange(n), len(known)), known.reshape(-1)),
+                      -1)
+            if (rest < 0).any():
+                raise ValueError("known matchings are not contained in e")
+            head.append(known)
+            e = rest
+            d -= len(known)
+        if d == 0:
+            results[g] = (np.concatenate(head) if head
+                          else np.empty((0, n), dtype=np.int64))
+            continue
+        if n == 1:
+            head.append(np.zeros((d, 1), dtype=np.int64))
+            results[g] = np.concatenate(head)
+            continue
+        ui, vi = np.nonzero(e)
+        mult = e[ui, vi]
+        eu = np.repeat(ui, mult)
+        ev = np.repeat(vi, mult)
+        if d % 2 == 1 and d > 1:
+            # the one permitted Hopcroft-Karp peel: evens the top regularity
+            perm = extract_perfect_matching(e)
+            head.append(perm[None, :])
+            key = eu * n + ev                      # sorted (construction)
+            pos = np.searchsorted(key, np.arange(n) * n + perm)
+            keep = np.ones(len(eu), dtype=bool)
+            keep[pos] = False
+            eu, ev = eu[keep], ev[keep]
+            d -= 1
+        if d == 1:
+            head.append(ev[None, :])
+            results[g] = np.concatenate(head)
+            continue
+        pend.append((g, head, eu, ev, d))
+    if not pend:
+        return results
+    d0 = pend[0][4]
+    if any(p[4] != d0 for p in pend):              # mixed regularity: solo
+        for g, head, eu, ev, d in pend:
+            byr = np.argsort(ev.astype(np.int64) * n + eu, kind="stable")
+            out = list(head)
+            _decompose_stubs(ev, byr, n, d, out)
+            results[g] = np.concatenate(out)
+        return results
+    offs = np.cumsum([0] + [len(ev) for *_, ev, _ in pend])
+    ev_all = np.concatenate([ev for *_, ev, _ in pend])
+    byr_all = np.concatenate([
+        np.argsort(ev.astype(np.int64) * n + eu, kind="stable")
+        + np.int64(off)
+        for (_, _, eu, ev, _), off in zip(pend, offs[:-1])])
+    sout: list = []
+    _decompose_stubs(ev_all, byr_all, n, d0, sout,
+                     mid=np.arange(len(pend), dtype=np.int32))
+    for u, (g, head, *_) in enumerate(pend):
+        parts = head + [p[m == u] for p, m in sout if (m == u).any()]
+        results[g] = np.concatenate(parts)
+    return results

@@ -14,14 +14,16 @@ from scipy.optimize import linear_sum_assignment
 from .matching import (
     decompose_matchings,
     decompose_matchings_euler,
+    decompose_matchings_euler_batch,
     extract_perfect_matching,
 )
-from .rounding import round_matrix
+from .rounding import round_matrices
 from .traffic import hose_normalize, saturate
 
 __all__ = [
     "Schedule",
     "vermilion_schedule",
+    "vermilion_schedules",
     "per_node_schedules",
     "effective_perms",
     "planes_changed",
@@ -120,6 +122,30 @@ class Schedule:
             out.append((src[keep], dst[keep], cap[keep]))
         return out
 
+    def slot_circuits_padded(
+        self, c: float = 1.0, pair_base: int = 0, j_pad: int | None = None,
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Device-friendly export of :meth:`slot_circuits`: rectangular
+        ``(n_slots, J)`` pair-id and capacity arrays a scan kernel can
+        gather per slot without ragged shapes.  Pair ids are the flat
+        ``src * n + dst`` offset by ``pair_base`` (a batch engine passes
+        ``case_index * n * n``); padded entries carry ``pair_base`` itself
+        (pair (0, 0) — never a real circuit, self-loops are dropped) with
+        zero capacity, so serving them is an exact no-op.  ``j_pad`` rounds
+        J up to a bucket multiple so near-miss support sizes share one
+        compiled kernel signature."""
+        plans = self.slot_circuits(c)
+        n = self.n
+        J = max((len(src) for src, _, _ in plans), default=0)
+        if j_pad is not None:
+            J = max(j_pad, -(-J // j_pad) * j_pad)
+        pid = np.full((self.n_slots, J), pair_base, dtype=np.int32)
+        cap = np.zeros((self.n_slots, J), dtype=np.float32)
+        for s, (src, dst, w) in enumerate(plans):
+            pid[s, :len(src)] = pair_base + src * n + dst
+            cap[s, :len(src)] = w
+        return pid, cap
+
 
 # ---------------------------------------------------------------------------
 # Vermilion — Algorithm 1
@@ -159,32 +185,52 @@ def vermilion_emulated_topology(
         per-entry guarantee can dip (use "hose" when the bound must hold
         verbatim — the theory tests do).
     """
-    m = np.asarray(m, dtype=np.float64)
-    n = m.shape[0]
+    return vermilion_emulated_topologies([m], k=k, seed=seed,
+                                         normalize=normalize)[0]
+
+
+def vermilion_emulated_topologies(
+    mats, k: int = 3, seed: int = 0, normalize: str = "hose"
+) -> list[np.ndarray]:
+    """Batched ``emulatedTopology``: one Bacharach flow rounds every matrix.
+
+    The per-matrix steps are unchanged (normalize, round, residual,
+    configuration-model padding, each view reseeded from the shared epoch
+    ``seed``); only the rounding is merged into a single
+    :func:`round_matrices` call, amortizing the scipy flow dispatch that
+    dominates construction at small n.  A batch of one is bit-identical to
+    the historical solo call (``round_matrix`` *is* the one-element batch).
+    """
     if k < 2:
         raise ValueError("k >= 2 (k-1 must be positive)")
-    rng = np.random.default_rng(seed)
+    pre = []
+    for m in mats:
+        m = np.asarray(m, dtype=np.float64)
+        n = m.shape[0]
+        # 1. normalize (max row/col sum <= 1), upscale, round
+        if normalize == "saturate":
+            norm = saturate(m)
+        elif normalize == "hose":
+            norm = hose_normalize(m)
+        else:
+            raise ValueError(normalize)
+        np.fill_diagonal(norm, 0.0)
+        pre.append((k - 1) * n * norm)
+    out = []
+    for r in round_matrices(pre):
+        n = r.shape[0]
+        rng = np.random.default_rng(seed)
+        # 2. traffic-aware multigraph + 3. oblivious residual (one per pair)
+        e = r + (1 - np.eye(n, dtype=np.int64))
 
-    # 1. normalize (max row/col sum <= 1), upscale, round
-    if normalize == "saturate":
-        norm = saturate(m)
-    elif normalize == "hose":
-        norm = hose_normalize(m)
-    else:
-        raise ValueError(normalize)
-    np.fill_diagonal(norm, 0.0)
-    r = round_matrix((k - 1) * n * norm)
-
-    # 2. traffic-aware multigraph + 3. oblivious residual (one edge per pair)
-    e = r + (1 - np.eye(n, dtype=np.int64))
-
-    # 4. pad to k*n-regularity with the configuration model
-    x_out = k * n - e.sum(axis=1)
-    x_in = k * n - e.sum(axis=0)
-    if (x_out < 0).any() or (x_in < 0).any():  # pragma: no cover
-        raise AssertionError("rounding exceeded degree budget")
-    e += _configuration_model(x_out, x_in, rng)
-    return e
+        # 4. pad to k*n-regularity with the configuration model
+        x_out = k * n - e.sum(axis=1)
+        x_in = k * n - e.sum(axis=0)
+        if (x_out < 0).any() or (x_in < 0).any():  # pragma: no cover
+            raise AssertionError("rounding exceeded degree budget")
+        e += _configuration_model(x_out, x_in, rng)
+        out.append(e)
+    return out
 
 
 _PHI = (np.sqrt(5.0) - 1.0) / 2.0
@@ -231,25 +277,63 @@ def vermilion_schedule(
     and emulated capacity are identical; only the matching multiset's
     split/order may differ (round-robin order is free, cf. paper §2.1).
     """
-    e = vermilion_emulated_topology(m, k=k, seed=seed, normalize=normalize)
-    n = e.shape[0]
+    return vermilion_schedules([m], k=k, d_hat=d_hat, recfg_frac=recfg_frac,
+                               seed=seed, spread=spread, normalize=normalize,
+                               method=method)[0]
+
+
+def vermilion_schedules(
+    mats,
+    k: int = 3,
+    d_hat: int = 1,
+    recfg_frac: float = 0.0,
+    seed: int = 0,
+    spread: bool = True,
+    normalize: str = "hose",
+    method: str = "euler",
+) -> list[Schedule]:
+    """Batched Algorithm 1: one schedule per matrix, built together.
+
+    All matrices share one Bacharach flow (rounding) and — under
+    ``method="euler"`` with a common shape — one merged Euler stub cascade
+    (:func:`decompose_matchings_euler_batch`), amortizing the solver
+    dispatch that dominates construction at small n.  Per-matrix output is
+    bit-identical to a solo :func:`vermilion_schedule` call; this is the
+    construction engine behind :func:`per_node_schedules`, where each
+    epoch builds up to n same-shape view schedules at once.
+    """
+    es = vermilion_emulated_topologies(mats, k=k, seed=seed,
+                                      normalize=normalize)
     if method == "euler":
+        same = len({e.shape[0] for e in es}) == 1
+        n = es[0].shape[0] if es else 0
         shifts = (np.arange(n)[None, :] + np.arange(1, n)[:, None]) % n
-        perms = decompose_matchings_euler(e, known=shifts)
+        if same:
+            perms_all = decompose_matchings_euler_batch(es, known=shifts)
+        else:  # pragma: no cover - callers pass same-shape batches
+            perms_all = [
+                decompose_matchings_euler(
+                    e, known=(np.arange(e.shape[0])[None, :]
+                              + np.arange(1, e.shape[0])[:, None])
+                    % e.shape[0])
+                for e in es]
     elif method == "hk":
-        perms = decompose_matchings(e)
+        perms_all = [decompose_matchings(e) for e in es]
     else:
         raise ValueError(f"unknown decomposition method {method!r}")
     if spread:
-        perms = spread_matchings(perms)
-    return Schedule(
-        perms=perms,
-        d_hat=d_hat,
-        recfg_frac=recfg_frac,
-        name=f"vermilion-k{k}",
-        meta={"k": k, "seed": seed, "spread": spread, "normalize": normalize,
-              "method": method},
-    )
+        perms_all = [spread_matchings(p) for p in perms_all]
+    return [
+        Schedule(
+            perms=perms,
+            d_hat=d_hat,
+            recfg_frac=recfg_frac,
+            name=f"vermilion-k{k}",
+            meta={"k": k, "seed": seed, "spread": spread,
+                  "normalize": normalize, "method": method},
+        )
+        for perms in perms_all
+    ]
 
 
 # ---------------------------------------------------------------------------
@@ -292,13 +376,10 @@ def per_node_schedules(
     deduplicated (e.g. for the estimate-error metric) don't pay twice.
     """
     masks, owner = views.unique() if unique is None else unique
-    scheds = [
-        vermilion_schedule(
-            views.rows * masks[g][:, None], k=k, d_hat=d_hat,
-            recfg_frac=recfg_frac, seed=seed, spread=spread,
-            normalize=normalize, method=method)
-        for g in range(masks.shape[0])
-    ]
+    scheds = vermilion_schedules(
+        [views.rows * masks[g][:, None] for g in range(masks.shape[0])],
+        k=k, d_hat=d_hat, recfg_frac=recfg_frac, seed=seed, spread=spread,
+        normalize=normalize, method=method)
     return scheds, owner
 
 

@@ -52,17 +52,43 @@ through one slot loop with a leading batch axis:
    ``(schedule, workload, mode)`` cases (see :class:`SweepCase`), batches
    single-hop and two-hop groups through the engines above, so one call
    evaluates an ``n × load × mode`` grid.  ``backend="jax"`` covers every
-   routing mode with jitted ``jax.lax.scan`` kernels (utilization /
-   delivered-bits / avg-hops only — per-flow FCTs stay on the NumPy
-   path): single-hop cases run the aggregate VOQ kernel; rotorlb/vlb
-   cases run the two-hop relay kernel, which carries relay state as
-   per-(at, dst) bucket *totals* (the source-attribution axis exists only
-   to credit flows, so it drops out of the aggregate dynamics exactly)
-   and picks between a dense einsum formulation (small n) and padded
-   circuit-support gathers + ``segment_sum`` over the same
-   :class:`_SupportPlans` LUT the NumPy engine uses (large n).  Kernels
-   jit once per padded shape bucket through a module-level compile cache
-   — repeated same-shape sweeps never retrace.
+   routing mode with jitted ``jax.lax.scan`` kernels *including per-flow
+   FCTs*: single-hop cases run the padded circuit-support ``singlehop``
+   kernel, whose per-slot delivered amounts the host replays through the
+   exact f64 flow-credit ledger (drain flags + ``_F32_DRAIN_REL``
+   reconcile f32 serving with the ledger, so FCT multisets match the
+   NumPy engine exactly on golden cases); small-n rotorlb/vlb batches run
+   the ``twohop_fct`` kernel, which keeps the per-source relay
+   attribution and emits per-slot delivered (src, dst) matrices for the
+   same replay.  Larger two-hop batches fall back to the aggregate relay
+   kernels, which carry relay state as per-(at, dst) bucket *totals* (the
+   source-attribution axis exists only to credit flows, so it drops out
+   of the aggregate dynamics exactly) and pick between a dense einsum
+   formulation (small n) and padded circuit-support gathers +
+   ``segment_sum`` over the same :class:`_SupportPlans` LUT the NumPy
+   engine uses (large n); their ``fct_slots`` stay all-inf.  Kernels jit
+   once per padded shape bucket through a module-level compile cache —
+   repeated same-shape sweeps never retrace
+   (:func:`compile_cache_stats` introspects traces / hits / buckets).
+
+Backend selection
+=================
+``backend="numpy"`` (default) is exact f64, supports every feature —
+faults, repair, ``collision="fullest"``, activation jitter, ``measured``
+construction charging — and wins on one-off small grids where jit
+compilation would dominate.  ``backend="jax"`` serves in f32 on the
+accelerator and wins on repeated or wide grids (same padded shape →
+compile once, then several-times-faster slot loops; the adaptive
+disagreement sweep drops from minutes to seconds): both :func:`run_sweep`
+and :func:`run_adaptive` accept it, and both emit per-flow FCT
+percentiles (two-hop modes only up to ``_TWOHOP_FCT_MAX_N``).  The jax
+adaptive path replays the control plane host-side (decision-identical to
+numpy — the epoch counters are arrivals-only) and batches every case's
+serving through ONE device scan; configurations needing per-slot host
+decisions inside the serving loop (faults / repair / ``fullest`` /
+jitter) raise ``ValueError`` and stay NumPy-only.  Aggregates match
+numpy to f32 tolerance (~1e-3 relative); FCTs match exactly on
+well-conditioned instances.
 
 6. **Adaptive epoch layer.**  :func:`run_adaptive` (see
    :class:`AdaptiveCase`) closes the paper's estimation→schedule control
@@ -148,6 +174,7 @@ The invariants the engines rely on are machine-checked two ways (see
 """
 from __future__ import annotations
 
+import hashlib
 import time
 from dataclasses import dataclass, field
 
@@ -180,6 +207,7 @@ __all__ = [
     "run_sweep",
     "run_adaptive",
     "simulate_aggregate_jax",
+    "compile_cache_stats",
     "WEBSEARCH_CDF",
 ]
 
@@ -532,7 +560,7 @@ def simulate_reference(
 # Vectorized batch engine
 # ---------------------------------------------------------------------------
 
-_PAD_W = 32          # water-level search depth before exact fallback
+_PAD_W = 8           # water-level search depth before exact fallback
 _KEY_DT = np.dtype([("p", np.int64), ("r", np.float64)])
 
 
@@ -577,6 +605,12 @@ class _CreditState:
         self.dead = 0
 
     def arrive(self, newf: np.ndarray) -> None:
+        # the insert below rewrites the whole keys/act arrays, so shedding
+        # tombstones first keeps every later O(active) pass proportional
+        # to genuinely alive flows (the batched replay ledger otherwise
+        # drags ~1/3 dead entries through each rebuild)
+        if self.dead * 4 > len(self.act) and self.dead > 1024:
+            self._compact()
         npid = self.pid[newf]
         stored = self.size[newf] + self.off[npid]
         o = np.lexsort((stored, npid))
@@ -624,19 +658,34 @@ class _CreditState:
             self.keys["r"] -= self.off[self.keys["p"]]
             self.off[:] = 0.0
 
-    def credit(self, delivered_flat: np.ndarray, slot: int) -> None:
+    def credit(self, delivered_flat: np.ndarray, slot: int,
+               drain_rel: float = 0.0, level_rel: float = 0.0) -> None:
         pids = np.flatnonzero(delivered_flat > 1e-9)
-        self.credit_pairs(pids, delivered_flat[pids], slot)
+        self.credit_pairs(pids, delivered_flat[pids], slot,
+                          drain_rel=drain_rel, level_rel=level_rel)
 
     def credit_pairs(self, pids: np.ndarray, s: np.ndarray,
-                     slot: int) -> None:
+                     slot: int, drain: np.ndarray | None = None,
+                     drain_rel: float = 0.0,
+                     level_rel: float = 0.0) -> None:
         """Credit ``s`` bits to each (unique) pair in ``pids`` — the sparse
-        entry point for engines that know the delivered support."""
+        entry point for engines that know the delivered support.
+
+        ``drain``/``drain_rel`` reconcile float32 engines with the f64
+        ledger: a pair flagged in ``drain`` (the device observed the queue
+        empty) or whose credit lands within ``drain_rel`` of its exact
+        remaining total is forced to complete fully, so f32 rounding in the
+        delivered amounts cannot leave 1-ulp residues that stall FCTs.
+        """
         if not self.act.size or not pids.size:
             return
         keep = s > 1e-9
+        if drain is not None:
+            keep |= drain
         if not keep.all():
             pids, s = pids[keep], s[keep]
+            if drain is not None:
+                drain = drain[keep]
         if not pids.size:
             return
         kp = self.keys["p"]
@@ -644,16 +693,53 @@ class _CreditState:
         hi = np.searchsorted(kp, pids, side="right")
         m = hi - lo
         g = m > 0
-        if not g.any():
-            return
-        pids, lo, hi, m, s = pids[g], lo[g], hi[g], m[g], s[g]
+        if not g.all():
+            if not g.any():
+                return
+            pids, lo, hi, m, s = pids[g], lo[g], hi[g], m[g], s[g]
+            if drain is not None:
+                drain = drain[g]
         S = len(pids)
         off_g = self.off[pids]
         stored = self.keys["r"]
 
+        # fast path: when the pair's smallest remaining (the head of its
+        # sorted run) sits above the no-completion water level s/m plus
+        # every epsilon the slow path could apply, nothing completes:
+        # head_rem > s/m implies head_rem*m > s >= s_eff so no flow sinks
+        # (j = 0), the level is exactly s/m — the same float op the full
+        # path performs as (s - 0.0) / max(m - 0, 1) — and head_rem
+        # clearing the guard keeps k = 0 and every drain_rel force off
+        head_rem = stored[lo] - off_g
+        lvl = s / m
+        guard = 1e-6 + 1.01 * drain_rel * s
+        if level_rel:
+            guard = guard + level_rel * (lvl + off_g)
+        easy = head_rem > lvl + guard
+        if drain is not None:
+            easy &= ~drain
+        if easy.all():
+            self.off[pids] = off_g + lvl
+            self.psum[pids] -= s
+            return
+        if easy.any():
+            pe = pids[easy]
+            self.off[pe] = off_g[easy] + lvl[easy]
+            self.psum[pe] -= s[easy]
+            hard = ~easy
+            pids, lo, hi, m, s = (pids[hard], lo[hard], hi[hard], m[hard],
+                                  s[hard])
+            off_g = off_g[hard]
+            if drain is not None:
+                drain = drain[hard]
+            S = len(pids)
+
         # exact remaining totals only where the budget might drain the pair
         s_eff = s
-        need = np.flatnonzero(4.0 * s >= np.maximum(self.psum[pids], 0.0))
+        need_mask = 4.0 * s >= np.maximum(self.psum[pids], 0.0)
+        if drain is not None:
+            need_mask |= drain
+        need = np.flatnonzero(need_mask)
         if need.size:
             mm = m[need]
             flat = np.repeat(lo[need], mm) + _ranged_arange(mm)
@@ -662,6 +748,15 @@ class _CreditState:
                    - mm * off_g[need])
             s_eff = s.copy()
             s_eff[need] = np.minimum(s[need], tot)
+            # force full completion where the device saw the queue drain, or
+            # where f32 rounding left the credit within drain_rel of exact
+            force = np.zeros(need.size, dtype=bool)
+            if drain is not None:
+                force |= drain[need]
+            if drain_rel > 0.0:
+                force |= (tot >= 0.0) & (tot - s[need] <= drain_rel * tot)
+            if force.any():
+                s_eff[need[force]] = np.maximum(tot[force], 0.0)
 
         # water level from the sorted prefix (true rem = stored - off)
         W = min(_PAD_W, int(m.max()))
@@ -679,7 +774,14 @@ class _CreditState:
         prev = np.where(j > 0, csum[np.arange(S), np.maximum(j - 1, 0)], 0.0)
         level = np.where(full, r_last,
                          (s_eff - prev) / np.maximum(m - j, 1))
-        k = ((r_pre <= (level + 1e-6)[:, None]) & valid).sum(axis=1)
+        # completion epsilon: exact engines (level_rel=0) use the absolute
+        # 1e-6 sliver; f32 pro-rata replays widen it by the accumulated
+        # drift scale (rounding in the credited amounts grows with the
+        # pair's cumulative water level), so a residue cannot stall a
+        # completion past its f64 slot.  Engines with per-pair drain flags
+        # (single-hop) keep level_rel=0 — their boundary is already exact.
+        eps = 1e-6 + level_rel * (np.maximum(level, 0.0) + off_g)
+        k = ((r_pre <= (level + eps)[:, None]) & valid).sum(axis=1)
         k[full] = m[full]
 
         # level search (or completion count) overran the pad: exact solve
@@ -692,8 +794,9 @@ class _CreditState:
             ji = int(np.searchsorted(f_g, s_eff[i], side="left"))
             level[i] = (r_g[-1] if ji >= mi else
                         (s_eff[i] - (c_g[ji - 1] if ji else 0.0)) / (mi - ji))
+            eps_i = 1e-6 + level_rel * (max(level[i], 0.0) + off_g[i])
             k[i] = mi if ji >= mi else int(
-                np.searchsorted(r_g, level[i] + 1e-6, side="right"))
+                np.searchsorted(r_g, level[i] + eps_i, side="right"))
 
         # complete the sunken prefix, advance offsets and totals
         self.off[pids] = off_g + level
@@ -1268,28 +1371,38 @@ def run_sweep(
     slot loop, two-hop cases (``rotorlb`` / ``vlb`` mix freely) through one
     dense-relay loop; results come back in input order.  With
     ``backend="jax"``, every routing mode runs as a jitted ``jax.lax.scan``
-    on the accelerator — single-hop cases through the aggregate VOQ kernel,
-    two-hop cases through the relay kernel (dense einsum at small n, padded
-    circuit-support gathers + segment_sum beyond) — utilization, delivered
-    bits, and avg_hops only; ``fct_slots`` is all-inf (use the NumPy
-    backend for FCTs).  The kernels jit once per padded shape signature, so
+    on the accelerator — single-hop cases through the padded circuit-support
+    VOQ kernel, two-hop cases through the relay kernel (dense einsum at
+    small n, padded circuit-support gathers + segment_sum beyond).  The jax
+    backend now emits per-flow FCTs too: the device scan returns the
+    per-slot delivered support and the host replays it through the exact
+    flow-credit ledger (single-hop always; two-hop when the per-(at, src,
+    dst) attribution tensor fits — see ``_twohop_fct_ok`` — otherwise
+    ``fct_slots`` stays all-inf and aggregates are unchanged).  Kernels jit
+    once per padded shape signature (see :func:`compile_cache_stats`), so
     repeated same-shape sweeps never recompile.
 
     ``sanitize``: run the :mod:`repro.analysis.sanitize` contract checks on
     every batch (default: the ``REPRO_SANITIZE`` env var); results are
     bit-identical either way.
+
+    Unsupported configurations (unknown backend / mode, fault injection on
+    the jax backend) raise ``ValueError`` here, before any case runs.
     """
     if backend not in ("numpy", "jax"):
-        raise ValueError(backend)
-    san = make_sanitizer(sanitize)
-    groups: dict[tuple, list[int]] = {}
+        raise ValueError(
+            f"backend must be 'numpy' or 'jax' (got {backend!r})")
     for i, c in enumerate(cases):
         if c.mode not in _MODES:
             raise ValueError(c.mode)
         if c.faults and backend == "jax":
             raise ValueError(
-                "fault injection is only supported on the numpy backend "
-                "(the jax aggregate kernels have no per-slot fault mask)")
+                f"cases[{i}] ({c.label!r}): fault injection is only "
+                "supported on the numpy backend — the jax kernels have no "
+                "per-slot fault mask; use backend='numpy' for this case")
+    san = make_sanitizer(sanitize)
+    groups: dict[tuple, list[int]] = {}
+    for i, c in enumerate(cases):
         groups.setdefault((c.wl.n, c.mode == "single_hop"), []).append(i)
     rows: list[SweepRow | None] = [None] * len(cases)
     for (_, single), idxs in groups.items():
@@ -1298,7 +1411,7 @@ def run_sweep(
         batch_faults = [cases[i].faults for i in idxs]
         t0 = time.perf_counter()
         if backend == "jax":
-            results = (_aggregate_batch_jax(batch, bits_per_slot, san=san)
+            results = (_singlehop_batch_jax(batch, bits_per_slot, san=san)
                        if single
                        else _twohop_batch_jax(batch, bits_per_slot, modes,
                                               san=san))
@@ -2235,6 +2348,7 @@ def _run_adaptive_case(case: AdaptiveCase, bits_per_slot: float,
 
 def run_adaptive(
     cases: list[AdaptiveCase], bits_per_slot: float,
+    backend: str = "numpy",
     sanitize: bool | None = None,
 ) -> list[AdaptiveRow]:
     """Closed-loop epoch-driven simulation of each case (see
@@ -2253,12 +2367,42 @@ def run_adaptive(
     report per-epoch disagreement and collision-loss alongside
     utilization.
 
+    ``backend="jax"`` runs the whole grid through one jitted device scan
+    per node count: the control plane (estimation → per-node schedules →
+    collision-resolved plans → activation/dark windows) is replayed
+    host-side exactly — the counters that drive it accumulate *arrivals*
+    only, so the full epoch trajectory is computable before any serving —
+    and the resulting per-slot circuit plans for every case batch through
+    the shared single-hop kernel, with per-flow FCTs recovered by the
+    host credit replay.  Cases the device path cannot express (faults,
+    ``repair=True``, ``collision="fullest"``, activation jitter) raise
+    ``ValueError`` up front; use the numpy backend for those.
+
     ``sanitize``: run the :mod:`repro.analysis.sanitize` contract checks —
     per-epoch bit conservation, fabric-plan validity, disagreement closure
     — on every case (default: the ``REPRO_SANITIZE`` env var); results are
     bit-identical either way.
     """
+    if backend not in ("numpy", "jax"):
+        raise ValueError(
+            f"backend must be 'numpy' or 'jax' (got {backend!r})")
     san = make_sanitizer(sanitize)
+    if backend == "jax":
+        for i, case in enumerate(cases):
+            _check_adaptive_jax_supported(case, i)
+        rows_out: list[AdaptiveRow | None] = [None] * len(cases)
+        groups: dict[int, list[int]] = {}
+        for i, case in enumerate(cases):
+            groups.setdefault(case.wl.n, []).append(i)
+        for idxs in groups.values():
+            t0 = time.perf_counter()
+            batch_rows = _run_adaptive_batch_jax(
+                [cases[i] for i in idxs], bits_per_slot, san=san)
+            dt = (time.perf_counter() - t0) / len(idxs)
+            for i, row in zip(idxs, batch_rows):
+                row.sim_s = dt
+                rows_out[i] = row
+        return rows_out  # type: ignore[return-value]
     rows = []
     for case in cases:
         t0 = time.perf_counter()
@@ -2266,6 +2410,25 @@ def run_adaptive(
         row.sim_s = time.perf_counter() - t0
         rows.append(row)
     return rows
+
+
+def _check_adaptive_jax_supported(case: "AdaptiveCase", i: int) -> None:
+    """Raise ValueError for AdaptiveCase features the jax backend cannot
+    express (they need per-slot host decisions inside the serving loop)."""
+    reason = None
+    if case.faults:
+        reason = "fault injection"
+    elif case.repair:
+        reason = "the repair loop (repair=True)"
+    elif case.collision == "fullest":
+        reason = "queue-aware arbitration (collision='fullest')"
+    elif case.activation_jitter_slots > 0:
+        reason = "per-node activation jitter"
+    if reason is not None:
+        raise ValueError(
+            f"cases[{i}] ({case.label!r}): {reason} is only supported on "
+            "the numpy backend — it requires per-slot host decisions the "
+            "device scan cannot replay; use backend='numpy' for this case")
 
 
 # ---------------------------------------------------------------------------
@@ -2280,11 +2443,67 @@ def run_adaptive(
 # signature.  _JAX_TRACES counts actual retraces (the kernel's Python body
 # only runs while jax traces it); a regression test pins it.
 _JAX_FNS: dict[str, "callable"] = {}
-_JAX_TRACES = {"agg": 0, "twohop_dense": 0, "twohop_sparse": 0}
+_JAX_TRACES = {"agg": 0, "twohop_dense": 0, "twohop_sparse": 0,
+               "singlehop": 0, "twohop_fct": 0}
+# Per-kernel call counts and the padded shape buckets seen, for
+# compile_cache_stats(): hits = calls - traces (a call whose padded
+# signature was already compiled never re-enters the traced Python body).
+_JAX_CALLS: dict[str, int] = {}
+_JAX_SHAPES: dict[str, set] = {}
 
 _PAD_H = 128         # horizon           -> multiple of 128 slots
 _PAD_K = 32          # arrivals per slot -> multiple of 32 flows
 _PAD_J = 64          # circuit support   -> multiple of 64 pairs
+
+# f32 serving vs f64 flow ledger: when a credited amount lands within this
+# relative distance of a pair's exact remaining bits, treat the pair as
+# fully drained (f32 has ~1.2e-7 ulp; slack covers a few hundred slots of
+# accumulated rounding in the per-slot tx sums).
+_F32_DRAIN_REL = 2e-5
+
+# Water-fill completion-boundary forgiveness for the pro-rata relay replay
+# (no per-pair drain observation there): scaled by the pair's cumulative
+# water level, since that is where credited-amount rounding accumulates.
+# Kept an order of magnitude above measured drift (~2.5e-8 of the level)
+# but tight enough that deep-backlog levels do not complete flows early.
+_F32_LEVEL_REL = 1e-6
+
+# The two-hop FCT kernel carries the full per-(at, src, dst) relay
+# attribution tensor (B, n, n, n) and emits per-slot (B, n, n) delivered
+# matrices — affordable at small n only.  Beyond these bounds the jax
+# two-hop path stays aggregate-only (fct_slots all inf).
+_TWOHOP_FCT_MAX_N = 64
+
+
+def _twohop_fct_ok(B: int, n: int, H_pad: int) -> bool:
+    return n <= _TWOHOP_FCT_MAX_N and H_pad * B * n * n * 4 <= (1 << 27)
+
+
+def _record_call(kernel: str, bucket: tuple) -> None:
+    _JAX_CALLS[kernel] = _JAX_CALLS.get(kernel, 0) + 1
+    _JAX_SHAPES.setdefault(kernel, set()).add(bucket)
+
+
+def compile_cache_stats() -> dict:
+    """Introspect the jax compile cache: per-kernel trace counts, call
+    counts, cache hits (calls that reused a compiled executable), and the
+    padded shape buckets seen so far this process.
+
+    A healthy sweep shows ``traces == len(shape_buckets)`` and hits
+    growing with every repeated same-shape call; a trace count above the
+    bucket count means the padding discipline regressed (see the
+    ``assert_no_retrace`` fixture).
+    """
+    stats = {}
+    for kernel, traces in _JAX_TRACES.items():
+        calls = _JAX_CALLS.get(kernel, 0)
+        stats[kernel] = {
+            "traces": traces,
+            "calls": calls,
+            "hits": max(calls - traces, 0),
+            "shape_buckets": sorted(_JAX_SHAPES.get(kernel, set())),
+        }
+    return stats
 
 # Dense (einsum over the full (B, n, n) relay-bucket matrix) vs sparse
 # (padded circuit-support gathers + segment_sum) two-hop kernel crossover,
@@ -2454,10 +2673,97 @@ def _jax_fns() -> dict:
             (cap_idx, apos, asz, live, plan_idx))
         return out, carry
 
+    def singlehop(voq0, apid, asz, p_pid, p_cap):
+        # Sparse single-hop serving over a padded per-slot circuit plan:
+        # one flat (B n^2) VOQ carry, per-slot arrival scatter at global
+        # flat pair ids, then tx = min(voq, cap) gathered over the plan
+        # columns.  Emits the per-slot delivered support (tx) and a
+        # drained flag per plan entry so the host credit replay can
+        # reconcile f32 serving with the exact f64 flow ledger.  The same
+        # kernel serves run_sweep's single-hop jax path and the whole
+        # adaptive jax backend (whose host-compiled epoch plans are just
+        # per-slot (pid, cap) rows).
+        _JAX_TRACES["singlehop"] += 1
+
+        def step(voq, inp):
+            ap, av, pid, cap = inp
+            voq = voq.at[ap].add(av)
+            q = voq[pid]
+            tx = jnp.minimum(q, cap)
+            voq = voq.at[pid].add(-tx)
+            drained = (tx >= q) & (tx > jnp.float32(0.0))
+            return voq, (tx, drained)
+
+        voq_f, out = jax.lax.scan(step, voq0, (apid, asz, p_pid, p_cap))
+        return voq_f, out
+
+    def twohop_fct(caps_flat, cap_idx, apos, asz, live, direct):
+        # Small-n two-hop kernel that KEEPS the per-source relay
+        # attribution the aggregate kernels drop: R3[b, at, src, dst]
+        # carries whose bits sit in each relay bucket, and the per-slot
+        # output is the full (B, n, n) delivered-per-(src, dst) matrix the
+        # host credit replay needs for per-flow FCTs.  Relay drains and
+        # offload sprays are proportional within a bucket, matching the
+        # NumPy engine's water-fill attribution float-for-float.
+        _JAX_TRACES["twohop_fct"] += 1
+        B, n = cap_idx.shape[1], caps_flat.shape[1]
+
+        def step(carry, inp):
+            voq, R3 = carry
+            cidx, pos, sz, lv = inp
+            voq = voq.at[pos[:, 0], pos[:, 1], pos[:, 2]].add(sz)
+            cap = caps_flat[cidx] * lv[:, None, None]
+            # priority 1: drain relay buckets, attributed pro-rata to src
+            RS = R3.sum(axis=2)                       # [b, at, dst] totals
+            send1 = jnp.minimum(RS, cap)
+            frac = jnp.where(RS > _JEPS,
+                             send1 / jnp.maximum(RS, _JEPS), 0.0)
+            dp = jnp.einsum(  # lint: allow-dense
+                "busv,buv->bsv", R3, frac)
+            R3 = R3 * (1.0 - frac)[:, :, None, :]
+            second = send1.sum(axis=(1, 2))
+            cap = cap - send1
+            # direct hop (vlb cases masked) — already (src, dst) resolved
+            tx = jnp.minimum(voq, cap) * direct
+            voq = voq - tx
+            dp = dp + tx
+            cap = cap - tx
+            # offload leftover capacity into relays, keeping src labels
+            leftover = cap.sum(axis=2)
+            queue = voq.sum(axis=2)
+            send_u = jnp.minimum(leftover, queue)
+            ls = jnp.where(leftover[:, :, None] > _JEPS,
+                           cap / jnp.maximum(leftover, _JEPS)[:, :, None],
+                           0.0)
+            qs = jnp.where(queue[:, :, None] > _JEPS,
+                           voq / jnp.maximum(queue, _JEPS)[:, :, None], 0.0)
+            # moved[b, u, v, d] = send_u * link_share[u, v] * q_share[u, d]
+            moved = ((send_u[:, :, None] * ls)[:, :, :, None]
+                     * qs[:, :, None, :])  # lint: allow-dense
+            voq = jnp.maximum(voq - send_u[:, :, None] * qs, 0.0)
+            # bits whose relay node IS the destination arrive at once,
+            # delivered for (src = u, dst = v)
+            diag = jnp.diagonal(moved, axis1=2, axis2=3)   # moved[b,u,v,v]
+            dp = dp + diag
+            moved = moved * (1.0 - jnp.eye(n, dtype=moved.dtype)
+                             )[None, None, :, :]
+            # relay bucket at v gains src-u bits destined d
+            R3 = R3 + moved.transpose(0, 2, 1, 3)
+            return (voq, R3), (dp, second)
+
+        carry, out = jax.lax.scan(
+            step,
+            (jnp.zeros((B, n, n), jnp.float32),     # lint: allow-dense
+             jnp.zeros((B, n, n, n), jnp.float32)),  # lint: allow-dense
+            (cap_idx, apos, asz, live))
+        return out, carry
+
     _JAX_FNS.update(
         agg=jax.jit(agg),
         twohop_dense=jax.jit(twohop_dense),
         twohop_sparse=jax.jit(twohop_sparse),
+        singlehop=jax.jit(singlehop),
+        twohop_fct=jax.jit(twohop_fct),
     )
     return _JAX_FNS
 
@@ -2565,33 +2871,196 @@ def _sanitize_jax_batch(
             label=f"jax:case{b}:conservation", float32=True)
 
 
-def _aggregate_batch_jax(
+def _twohop_fct_results(
+    cases, modes, bits_per_slot, caps_list, dp, second,
+    voq_f: np.ndarray, r3_f: np.ndarray, H: int, san,
+) -> list[SimResult]:
+    """Host side of the ``twohop_fct`` path: replay the per-slot delivered
+    (src, dst) matrices through the exact flow-credit ledger and wrap real
+    per-flow FCTs into the SimResults."""
+    B = len(cases)
+    n = cases[0][1].n
+    horizons = np.array([wl.horizon for _, wl in cases], dtype=np.int64)
+    f_off, _, _, fct, credit, order, bucket = _concat_flows(
+        cases, n, horizons, H)
+    dp64 = np.asarray(dp, np.float64)
+    for slot in range(H):
+        newf = order[bucket[slot]:bucket[slot + 1]]
+        if newf.size:
+            credit.arrive(newf)
+        credit.credit(dp64[slot].reshape(-1), slot,
+                      drain_rel=_F32_DRAIN_REL, level_rel=_F32_LEVEL_REL)
+    second64 = np.asarray(second, np.float64)
+    results = []
+    for b, (sched, wl) in enumerate(cases):
+        delivered = float(dp64[:H, b].sum())
+        sec = float(second64[:H, b].sum())
+        offered = float(wl.size[wl.arrival < wl.horizon].sum())
+        ideal = wl.horizon * n * sched.d_hat * bits_per_slot
+        results.append(SimResult(
+            fct_slots=fct[f_off[b]:f_off[b + 1]],
+            flow_size=wl.size,
+            utilization=delivered / ideal,
+            delivered_bits=delivered,
+            offered_bits=offered,
+            avg_hops=1.0 + sec / max(delivered, 1e-9),
+        ))
+    if san is not None:
+        relay_queued = r3_f.reshape(B, -1).sum(axis=1)
+        _sanitize_jax_batch(san, cases, caps_list, bits_per_slot, results,
+                            voq_f, relay_queued)
+        rem, completed = credit.remaining_active()
+        san.check_credit_closure(
+            sum(r.offered_bits for r in results),
+            sum(r.delivered_bits for r in results), rem, completed,
+            label="jax:twohop_fct:credit", float32=True)
+    return results
+
+
+def _singlehop_jax_flows(
+    wls: list[Workload], n: int, horizons: np.ndarray, H: int, H_pad: int,
+):
+    """Concatenated flow state + padded per-slot arrival scatter lists for
+    the single-hop jax paths (sweep and adaptive): flat global pair ids
+    ``(case * n + src) * n + dst``, arrivals per slot padded to a
+    ``_PAD_K`` bucket (padding scatters 0 bits at pair id 0 — exact
+    no-op).  Returns (f_off, fct, credit, order, bucket, apid, asz)."""
+    B = len(wls)
+    f_off = np.concatenate(
+        [[0], np.cumsum([wl.num_flows for wl in wls])]).astype(np.int64)
+    f_item = np.concatenate(
+        [np.full(wl.num_flows, b, dtype=np.int64)
+         for b, wl in enumerate(wls)])
+    f_src = np.concatenate([wl.src for wl in wls]).astype(np.int64)
+    f_dst = np.concatenate([wl.dst for wl in wls]).astype(np.int64)
+    f_size = np.concatenate([wl.size for wl in wls]).astype(np.float64)
+    f_arr = np.concatenate([wl.arrival for wl in wls]).astype(np.int64)
+    pid = (f_item * n + f_src) * n + f_dst
+    fct = np.full(len(f_size), np.inf)
+    credit = _CreditState(B * n * n, pid, f_size, f_arr, fct)
+    valid = f_arr < horizons[f_item]
+    order = np.argsort(f_arr, kind="stable")
+    order = order[valid[order]]
+    bucket = np.searchsorted(f_arr[order], np.arange(H + 1))
+    counts = np.diff(bucket)
+    K = _pad_to(int(counts.max()) if counts.size else 0, _PAD_K)
+    apid = np.zeros((H_pad, K), dtype=np.int32)
+    asz = np.zeros((H_pad, K), dtype=np.float32)
+    rows_i = np.repeat(np.arange(H), counts)
+    cols_i = _ranged_arange(counts)
+    apid[rows_i, cols_i] = pid[order]
+    asz[rows_i, cols_i] = f_size[order]
+    return f_off, fct, credit, order, bucket, apid, asz
+
+
+def _replay_credit(credit: _CreditState, order: np.ndarray,
+                   bucket: np.ndarray, p_pid: np.ndarray, tx, drained,
+                   H: int) -> np.ndarray:
+    """Replay the device scan's per-slot delivered support through the
+    exact f64 flow-credit ledger: arrivals enter in the same stable order
+    as the numpy engines, then each slot's (pid, tx) support is credited
+    with drain reconciliation (``drain`` flags + ``_F32_DRAIN_REL``).
+    Returns the per-slot tx widened to f64 for the delivered-bits sums."""
+    pid64 = np.asarray(p_pid, np.int64)
+    tx64 = np.asarray(tx, np.float64)
+    dr = np.asarray(drained, bool)
+    # one vectorized pass extracts each slot's nonzero support (np.nonzero
+    # is row-major, so per-slot runs are contiguous); the loop then feeds
+    # credit_pairs pre-filtered columns and skips dark/empty slots outright
+    live = (tx64[:H] > 1e-9) | dr[:H]
+    nz_row, nz_col = np.nonzero(live)
+    bnd = np.concatenate([[0], np.cumsum(live.sum(axis=1))])
+    pid_nz = pid64[nz_row, nz_col]
+    s_nz = tx64[nz_row, nz_col]
+    dr_nz = dr[nz_row, nz_col]
+    for slot in range(H):
+        newf = order[bucket[slot]:bucket[slot + 1]]
+        if newf.size:
+            credit.arrive(newf)
+        a, b = bnd[slot], bnd[slot + 1]
+        if a == b:
+            continue
+        credit.credit_pairs(pid_nz[a:b], s_nz[a:b], slot,
+                            drain=dr_nz[a:b], drain_rel=_F32_DRAIN_REL)
+    return tx64
+
+
+def _singlehop_batch_jax(
     cases: list[tuple[Schedule, Workload]], bits_per_slot: float,
     san=None,
 ) -> list[SimResult]:
-    """Single-hop aggregate dynamics for a batch via a jitted
-    ``jax.lax.scan`` (compile cache shared with the two-hop kernels).
-
-    Flow-completion times are not tracked (fct_slots all inf); delivered
-    bits / utilization match the NumPy engine.
-    """
+    """Single-hop dynamics for a batch via the jitted ``singlehop`` scan
+    (compile cache shared with the adaptive jax backend), with per-flow
+    FCTs: the device serves the padded per-slot circuit support in f32 and
+    the host replays the delivered amounts through the exact f64
+    processor-sharing credit ledger.  Delivered bits / utilization match
+    the NumPy engine to f32 tolerance; FCT multisets match exactly on
+    well-conditioned instances (drain reconciliation absorbs f32 ulp
+    residues)."""
     fns = _jax_fns()
     B = len(cases)
     n = cases[0][1].n
-    caps_list, caps_flat, cap_idx, apos, asz, live, H = _jax_batch_inputs(
-        cases, bits_per_slot)
-    # aggregate dynamics are dense anyway: scatter the padded arrival
-    # lists into the (H_pad, B, n, n) per-slot arrival tensor
-    H_pad, K = asz.shape
-    arr = np.zeros((H_pad, B, n, n), dtype=np.float32)  # lint: allow-dense
-    np.add.at(arr, (np.repeat(np.arange(H_pad), K),
-                    apos[:, :, 0].ravel(), apos[:, :, 1].ravel(),
-                    apos[:, :, 2].ravel()), asz.ravel())
-    delivered, voq_f = fns["agg"](caps_flat, cap_idx, arr, live)
-    results = _jax_results(cases, delivered, None, bits_per_slot)
+    for sched, wl in cases:
+        if wl.n != n:
+            raise ValueError("all workloads in a batch must share n")
+        if sched.n != n:
+            raise ValueError("schedule/workload size mismatch")
+    horizons = np.array([wl.horizon for _, wl in cases], dtype=np.int64)
+    H = int(horizons.max())
+    H_pad = _pad_to(H, _PAD_H)
+
+    # per-case padded circuit plans -> per-case column blocks of one
+    # (H_pad, J_total) plan; capacities zero past a case's horizon
+    padded = [sched.slot_circuits_padded(bits_per_slot,
+                                         pair_base=b * n * n, j_pad=_PAD_J)
+              for b, (sched, _) in enumerate(cases)]
+    offs = np.concatenate(
+        [[0], np.cumsum([p[0].shape[1] for p in padded])]).astype(np.int64)
+    Jtot = int(offs[-1])
+    p_pid = np.zeros((H_pad, Jtot), dtype=np.int32)
+    p_cap = np.zeros((H_pad, Jtot), dtype=np.float32)
+    slots = np.arange(H)
+    for b, (ppid, pcap) in enumerate(padded):
+        ps = slots % ppid.shape[0]
+        h_b = int(horizons[b])
+        p_pid[:H, offs[b]:offs[b + 1]] = ppid[ps]
+        p_cap[:h_b, offs[b]:offs[b + 1]] = pcap[ps[:h_b]]
+
+    f_off, fct, credit, order, bucket, apid, asz = _singlehop_jax_flows(
+        [wl for _, wl in cases], n, horizons, H, H_pad)
+    voq0 = np.zeros(B * n * n, dtype=np.float32)  # lint: allow-dense
+    _record_call("singlehop", (B, n, H_pad, apid.shape[1], Jtot))
+    voq_f, (tx, drained) = fns["singlehop"](voq0, apid, asz, p_pid, p_cap)
+    tx64 = _replay_credit(credit, order, bucket, p_pid, tx, drained, H)
+
+    results = []
+    for b, (sched, wl) in enumerate(cases):
+        cols = slice(int(offs[b]), int(offs[b + 1]))
+        delivered = float(tx64[:int(horizons[b]), cols].sum())
+        offered = float(wl.size[wl.arrival < wl.horizon].sum())
+        ideal = wl.horizon * n * sched.d_hat * bits_per_slot
+        results.append(SimResult(
+            fct_slots=fct[f_off[b]:f_off[b + 1]],
+            flow_size=wl.size,
+            utilization=delivered / ideal,
+            delivered_bits=delivered,
+            offered_bits=offered,
+            avg_hops=1.0,
+        ))
     if san is not None:
-        _sanitize_jax_batch(san, cases, caps_list, bits_per_slot, results,
-                            np.asarray(voq_f, np.float64))
+        voq64 = np.asarray(voq_f, np.float64)
+        for b, (sched, wl) in enumerate(cases):
+            san.check_workload(wl)
+            san.check_schedule(sched)
+            queued = float(voq64[b * n * n:(b + 1) * n * n].sum())
+            san.check_conservation(
+                results[b].offered_bits, results[b].delivered_bits, queued,
+                label=f"jax:case{b}:conservation", float32=True)
+        rem, completed = credit.remaining_active()
+        san.check_credit_closure(
+            sum(r.offered_bits for r in results),
+            sum(r.delivered_bits for r in results), rem, completed,
+            label="jax:singlehop:credit", float32=True)
     return results
 
 
@@ -2606,9 +3075,14 @@ def _twohop_batch_jax(
     a jitted ``jax.lax.scan`` — the accelerated counterpart of
     :func:`_simulate_batch`'s relay loop.
 
-    Aggregate quantities only (utilization / delivered bits / avg_hops
-    match the NumPy engine; fct_slots are all inf).  ``kernel`` forces the
-    ``"dense"`` einsum or ``"sparse"`` padded-support formulation; by
+    When the per-(at, src, dst) attribution tensor fits
+    (``_twohop_fct_ok``; default kernel selection only), the batch runs
+    the ``twohop_fct`` kernel, which emits per-slot delivered (src, dst)
+    matrices, and the host replays them through the exact flow-credit
+    ledger — fct_slots are real.  Otherwise aggregate quantities only
+    (utilization / delivered bits / avg_hops match the NumPy engine;
+    fct_slots all inf).  ``kernel`` forces the ``"dense"`` einsum or
+    ``"sparse"`` padded-support formulation (both aggregate-only); by
     default the crossover picks dense for n <= ``_TWOHOP_DENSE_MAX_N``.
     The sparse kernel scans a per-period-residue circuit-support LUT built
     by the same :class:`_SupportPlans` merge the NumPy engine uses.
@@ -2621,11 +3095,21 @@ def _twohop_batch_jax(
     n = cases[0][1].n
     caps_list, caps_flat, cap_idx, apos, asz, live, H = _jax_batch_inputs(
         cases, bits_per_slot)
+    H_pad = asz.shape[0]
     direct = np.array([0.0 if m == "vlb" else 1.0 for m in modes],
                       dtype=np.float32).reshape(B, 1, 1)
+    if kernel is None and _twohop_fct_ok(B, n, H_pad):
+        _record_call("twohop_fct", (B, n, H_pad, asz.shape[1]))
+        (dp, second), (voq_f, r3_f) = fns["twohop_fct"](
+            caps_flat, cap_idx, apos, asz, live, direct)
+        return _twohop_fct_results(
+            cases, modes, bits_per_slot, caps_list, dp, second,
+            np.asarray(voq_f, np.float64),
+            np.asarray(r3_f, np.float64), H, san)
     if kernel is None:
         kernel = "dense" if n <= _TWOHOP_DENSE_MAX_N else "sparse"
     if kernel == "dense":
+        _record_call("twohop_dense", (B, n, H_pad, asz.shape[1]))
         (delivered, second), (voq_f, rs_f) = fns["twohop_dense"](
             caps_flat, cap_idx, apos, asz, live, direct)
     elif kernel == "sparse":
@@ -2656,6 +3140,7 @@ def _twohop_batch_jax(
             p_v[i, :j] = p["v"]
             p_b[i, :j] = p["b"]
             p_valid[i, :j] = True
+        _record_call("twohop_sparse", (B, n, H_pad, asz.shape[1], J, P))
         (delivered, second), (voq_f, rs_f) = fns["twohop_sparse"](
             caps_flat, cap_idx, apos, asz, live, plan_idx,
             p_row, p_v, p_b, p_valid, direct)
@@ -2695,5 +3180,468 @@ def simulate_aggregate_jax(
     live[:horizon, 0] = 1.0
     arr = np.zeros((H_pad, 1, n, n), dtype=np.float32)  # lint: allow-dense
     arr[:horizon, 0] = arrivals
+    _record_call("agg", (1, n, H_pad))
     delivered, voq_f = fns["agg"](caps_flat, cap_idx, arr, live)
     return np.asarray(delivered)[:horizon, 0], np.asarray(voq_f)[0]
+
+
+# ---------------------------------------------------------------------------
+# JAX adaptive backend: host-compiled control plane + one device scan
+# ---------------------------------------------------------------------------
+
+def _compile_adaptive_plan(case: AdaptiveCase, bits_per_slot: float,
+                           san=None, sched_cache: dict | None = None):
+    """Host-side replay of the adaptive control loop WITHOUT serving.
+
+    The epoch counters that drive the control plane accumulate *arrival*
+    bits only — never served bits — so for every jax-supported case the
+    whole control trajectory (fleet EWMA → quantized ring gather →
+    per-node schedules → collision-resolved fabric plans → construction
+    charging → activation dark windows → churn hysteresis) is computable
+    before any serving happens.  This mirrors :func:`_run_adaptive_case`
+    decision-for-decision (bit-identical counters: one ``np.add.at`` over
+    the epoch's stable-ordered arrival slice reproduces the per-slot
+    accumulation element-for-element) and emits, per slot, an index into a
+    registry of ``(pair_id, capacity)`` circuit plans the device scan then
+    serves.  Registry id 0 is the empty plan (fully-dark slots).
+
+    ``sched_cache`` (shared across a batch) memoizes schedule
+    *construction* on the exact estimator inputs — the expensive
+    ``vermilion_schedule`` / ``per_node_schedules`` calls — so a grid that
+    varies only the collision policy pays construction once; the (cheap,
+    collision-specific) ``_fabric_plan`` merge always runs.  Disabled for
+    ``construction_slots="measured"``, where the charge is the actual
+    wall-clock of a fresh construction.
+    """
+    wl, n = case.wl, case.wl.n
+    E, H = case.epoch_slots, wl.horizon
+    n_epochs = -(-H // E)
+    cs = case.construction_slots
+    measured = cs == "measured"
+    if measured:
+        sched_cache = None
+    penalty = int(case.reconfig_penalty_slots)
+    if san is not None:
+        san.check_workload(wl)
+    san_w = bits_per_slot * (1.0 - case.recfg_frac)
+
+    f_size = wl.size.astype(np.float64)
+    valid = wl.arrival < H
+    order = np.argsort(wl.arrival, kind="stable")
+    order = order[valid[order]]
+    bucket = np.searchsorted(wl.arrival[order], np.arange(H + 1))
+
+    true_epoch = np.zeros((n_epochs, n, n))  # lint: allow-dense
+    np.add.at(true_epoch,
+              (wl.arrival[order] // E, wl.src[order], wl.dst[order]),
+              f_size[order])
+    oracle_m = case.oracle_demand
+    if oracle_m is not None and oracle_m.shape != (n_epochs, n, n):
+        raise ValueError(
+            f"oracle_demand shape {oracle_m.shape} != {(n_epochs, n, n)}")
+    if oracle_m is None:
+        oracle_m = true_epoch / E
+
+    fleet = TrafficEstimator.fleet(n, alpha=case.alpha)
+    q_unit = _quantizer_unit(E, case.k, case.d_hat, bits_per_slot)
+
+    construction_s = 0.0
+    last_construction = 0.0
+    cache_key_base = (case.k, case.d_hat, case.recfg_frac, case.normalize,
+                      case.method)
+
+    def consistent_plan(sched: Schedule) -> _FabricPlan:
+        fp = _fabric_plan([sched], np.zeros(n, dtype=np.int64),
+                          bits_per_slot, case.collision)
+        if san is not None:
+            san.check_schedule(sched)
+            san.check_fabric_plan(fp, n, sched.d_hat, san_w)
+        return fp
+
+    def vsched(m: np.ndarray, seed: int) -> Schedule:
+        nonlocal construction_s, last_construction
+        key = None
+        if sched_cache is not None:
+            key = ("v", m.tobytes(), seed) + cache_key_base
+            hit = sched_cache.get(key)
+            if hit is not None:
+                s, dt = hit
+                last_construction = dt
+                construction_s += dt
+                return s
+        t0 = time.perf_counter()
+        s = vermilion_schedule(
+            m, k=case.k, d_hat=case.d_hat, recfg_frac=case.recfg_frac,
+            seed=seed, normalize=case.normalize, method=case.method)
+        last_construction = time.perf_counter() - t0
+        construction_s += last_construction
+        if key is not None:
+            sched_cache[key] = (s, last_construction)
+        return s
+
+    def vsched_per_node(views, seed: int, unique) -> _FabricPlan:
+        nonlocal construction_s, last_construction
+        masks, owner = unique
+        key = None
+        if sched_cache is not None:
+            key = ("pn", views.rows.tobytes(), masks.tobytes(),
+                   owner.tobytes(), seed) + cache_key_base
+            hit = sched_cache.get(key)
+            if hit is not None:
+                scheds, sowner, dt = hit
+            else:
+                hit = None
+        if sched_cache is None or hit is None:
+            t0 = time.perf_counter()
+            scheds, sowner = per_node_schedules(
+                views, k=case.k, d_hat=case.d_hat,
+                recfg_frac=case.recfg_frac, seed=seed,
+                normalize=case.normalize, method=case.method, unique=unique)
+            dt = time.perf_counter() - t0
+            if key is not None:
+                sched_cache[key] = (scheds, sowner, dt)
+        construction_s += dt
+        # the fabric waits for one local construction (see
+        # _run_adaptive_case.vsched_per_node)
+        last_construction = dt / len(scheds)
+        fp = _fabric_plan(scheds, sowner, bits_per_slot, case.collision)
+        if san is not None:
+            for s in scheds:
+                san.check_schedule(s)
+            san.check_fabric_plan(fp, n, case.d_hat, san_w)
+        return fp
+
+    if case.policy in ("oracle", "stale"):
+        fp = consistent_plan(vsched(oracle_m[0], case.seed))
+    else:
+        fp = consistent_plan(oblivious_schedule(n, d_hat=case.d_hat,
+                                                recfg_frac=case.recfg_frac))
+    sched_t0 = 0
+    pending: tuple[int, _FabricPlan] | None = None
+
+    est_tv = np.full(n_epochs, np.nan)
+    dis_slot = np.zeros(H)
+    coll_slot = np.zeros(H)
+    plan_ids = np.zeros(H, dtype=np.int32)
+    registry: list[tuple[np.ndarray, np.ndarray]] = [
+        (np.empty(0, dtype=np.int64), np.empty(0, dtype=np.float64))]
+    memo: dict[tuple, int] = {}
+    keep_alive: list = [fp]        # plans are memo-keyed by id(); pin them
+    recomputes = 0
+    stale_slots = 0
+    dark_slots = 0
+    dark_plane_slots = 0.0
+    groups_max = 1
+    plane_dark_until = np.zeros(case.d_hat, dtype=np.int64)
+    counters = np.zeros((n, n))
+    last_est: np.ndarray | None = None
+    last_sig: tuple | None = None
+
+    def activate(new_fp: _FabricPlan, s: int) -> None:
+        nonlocal fp, sched_t0, groups_max
+        if penalty:
+            om, nm = fp.plane_map, new_fp.plane_map
+            if (fp.eff is None or new_fp.eff is None
+                    or fp.eff.shape != new_fp.eff.shape
+                    or not np.array_equal(om, nm)):
+                plane_dark_until[nm] = s + penalty
+            else:
+                ch = planes_changed(fp.eff, new_fp.eff, len(nm))
+                plane_dark_until[nm[ch]] = s + penalty
+        fp, sched_t0 = new_fp, s
+        keep_alive.append(new_fp)
+        groups_max = max(groups_max, new_fp.groups)
+
+    slot = 0
+    while slot < H:
+        if pending is not None and slot >= pending[0]:
+            swap_fp = pending[1]
+            pending = None
+            activate(swap_fp, slot)
+        if slot and slot % E == 0:
+            epoch = slot // E
+            # bit-identical counter replica: the numpy loop adds each
+            # slot's stable-ordered arrival slice via one np.add.at; one
+            # np.add.at over the epoch's concatenated slice performs the
+            # identical element-ordered float accumulation
+            swap = None
+            if case.policy == "adaptive":
+                # the estimation round and its TV-accuracy metric are
+                # collision-independent, so a grid varying only the
+                # data-plane resolution computes each epoch's views once
+                # (keyed per epoch: the fleet EWMA is stateful, so a case
+                # either hits every epoch of a cached trajectory or
+                # replays the whole chain itself)
+                ctl_key = None
+                ctl = None
+                if sched_cache is not None and san is None:
+                    ctl_key = ("ctl", id(wl), epoch, case.gather_steps,
+                               case.alpha, E, case.seed) + cache_key_base
+                    ctl = sched_cache.get(ctl_key)
+                if ctl is None:
+                    counters[:] = 0.0
+                    seg = order[bucket[(epoch - 1) * E]:bucket[epoch * E]]
+                    np.add.at(counters, (wl.src[seg], wl.dst[seg]),
+                              f_size[seg])
+                    views = estimate_all_views(
+                        counters, fleet, case.k, q_unit,
+                        steps=case.gather_steps)
+                    if san is not None:
+                        san.check_views(views)
+                    t = true_epoch[epoch - 1]
+                    masks, owner = views.unique()
+                    counts = np.bincount(owner, minlength=masks.shape[0])
+                    t_sum = t.sum()
+                    tn = t / t_sum if t_sum > 0 else None
+                    nonempty = (masks @ views.rows.sum(axis=1)) > 0
+                    tvs, wts = [], []
+                    for g in range(masks.shape[0]):
+                        if tn is not None and nonempty[g]:
+                            est_g = views.rows * masks[g][:, None]
+                            tvs.append(0.5 * np.abs(
+                                est_g / est_g.sum() - tn).sum())
+                            wts.append(counts[g])
+                    tv_val = (float(np.average(tvs, weights=wts))
+                              if tvs else None)
+                    if ctl_key is not None:
+                        sched_cache[ctl_key] = (views, masks, owner, tv_val)
+                else:
+                    views, masks, owner, tv_val = ctl
+                if tv_val is not None:
+                    est_tv[epoch - 1] = tv_val
+                build = views.rows.sum() > 0
+                if build and case.swap_tv_threshold > 0.0:
+                    cur = views.rows / views.rows.sum()
+                    sig = (b"", b"", b"")   # no repair state on this path
+                    if (last_est is not None and sig == last_sig
+                            and 0.5 * np.abs(cur - last_est).sum()
+                                < case.swap_tv_threshold):
+                        build = False
+                    else:
+                        last_est, last_sig = cur, sig
+                if build:
+                    swap = vsched_per_node(views, case.seed + epoch,
+                                           (masks, owner))
+            elif case.policy == "oracle":
+                if oracle_m[epoch].sum() > 0:
+                    swap = consistent_plan(
+                        vsched(oracle_m[epoch], case.seed + epoch))
+            if swap is not None:
+                recomputes += 1
+                charge = (int(np.ceil(last_construction
+                                      / case.slot_seconds))
+                          if measured else int(cs))
+                if charge == 0:
+                    pending = None
+                    activate(swap, slot)
+                else:
+                    pending = (slot + charge, swap)
+        # per-slot state (fabric, pending status, per-plane darkness) is
+        # constant until the next control event, so the whole run of slots
+        # up to it is classified and filled in one vectorized pass — the
+        # numpy engine cannot do this because serving (VOQ evolution,
+        # collision outcomes) feeds back into its per-slot decisions
+        nxt = min(H, (slot // E + 1) * E)
+        if pending is not None:
+            nxt = min(nxt, int(pending[0]))
+        for t in plane_dark_until[fp.plane_map]:
+            if slot < t < nxt:
+                nxt = int(t)
+        seg = np.arange(slot, nxt)
+        if pending is not None:
+            stale_slots += nxt - slot
+
+        dark = plane_dark_until[fp.plane_map] > slot
+        if dark.all():                 # plan id 0: fully-dark, serve nothing
+            dark_slots += nxt - slot
+            dark_plane_slots += float(dark.sum()) * (nxt - slot)
+            slot = nxt
+            continue
+        ps_arr = (seg - sched_t0) % fp.n_slots
+        ids_u = np.zeros(fp.n_slots, dtype=np.int32)
+        if not dark.any() and fp.plans is not None:
+            # fast path: the precomputed period-slot plans
+            dis_slot[seg] = fp.disagreement
+            coll_slot[seg] = fp.lost[ps_arr]
+            for p in np.unique(ps_arr):
+                key = (id(fp), int(p))
+                idx = memo.get(key)
+                if idx is None:
+                    idx = memo[key] = len(registry)
+                    registry.append(fp.plans[int(p)])
+                ids_u[p] = idx
+            plan_ids[seg] = ids_u[ps_arr]
+            slot = nxt
+            continue
+        # partially-dark slots: rebuild from raw claims with the statically
+        # arbitrated winners ("fullest" was rejected at entry)
+        dark_plane_slots += float(dark.sum()) * (nxt - slot)
+        dis_slot[seg] = fp.disagreement
+        dl = len(fp.plane_map)
+        coll_u = np.zeros(fp.n_slots)
+        for p in np.unique(ps_arr):
+            lo = int(p) * dl
+            hi = min(lo + dl, fp.eff.shape[0])
+            rows_e = fp.eff[lo:hi]
+            planes = fp.plane_map[:hi - lo]
+            live = (plane_dark_until[planes] <= slot)[:, None]
+            nonself = fp.nonself[lo:hi]
+            win = fp.win[lo:hi]
+            coll_u[p] = float((nonself & live & ~win).sum()) * fp.w
+            key = (id(fp), lo, live.tobytes())
+            idx = memo.get(key)
+            if idx is None:
+                served = win & nonself & live
+                srr, sii = np.nonzero(served)
+                if srr.size:
+                    spid, inv = np.unique(sii * n + rows_e[srr, sii],
+                                          return_inverse=True)
+                    scap = np.bincount(inv).astype(np.float64) * fp.w
+                else:
+                    spid = np.empty(0, dtype=np.int64)
+                    scap = np.empty(0, dtype=np.float64)
+                idx = memo[key] = len(registry)
+                registry.append((spid, scap))
+            ids_u[p] = idx
+        coll_slot[seg] = coll_u[ps_arr]
+        plan_ids[seg] = ids_u[ps_arr]
+        slot = nxt
+
+    return {
+        "registry": registry, "plan_ids": plan_ids,
+        "dis_slot": dis_slot, "coll_slot": coll_slot, "est_tv": est_tv,
+        "recomputes": recomputes, "stale_slots": stale_slots,
+        "dark_slots": dark_slots, "dark_plane_slots": dark_plane_slots,
+        "groups_max": groups_max, "construction_s": construction_s,
+        "n_epochs": n_epochs, "keep_alive": keep_alive,
+    }
+
+
+def _run_adaptive_batch_jax(
+    cases: list[AdaptiveCase], bits_per_slot: float, san=None,
+) -> list[AdaptiveRow]:
+    """The jax adaptive backend: compile every case's control trajectory
+    host-side (:func:`_compile_adaptive_plan`, construction shared across
+    cases via the batch schedule cache), pack the per-slot circuit plans
+    into per-case column blocks of one padded ``(H_pad, J)`` plan, serve
+    the whole batch in ONE ``singlehop`` device scan, and recover exact
+    per-flow FCTs through the host credit replay."""
+    fns = _jax_fns()
+    B = len(cases)
+    n = cases[0].wl.n
+    horizons = np.array([c.wl.horizon for c in cases], dtype=np.int64)
+    H = int(horizons.max())
+    H_pad = _pad_to(H, _PAD_H)
+    sched_cache: dict = {}
+    compiled = [_compile_adaptive_plan(c, bits_per_slot, san=san,
+                                       sched_cache=sched_cache)
+                for c in cases]
+
+    # cases whose compiled data plane is byte-identical (same workload
+    # object, horizon and per-slot circuit plan) have identical device
+    # dynamics and identical per-flow FCTs, so they are served and
+    # replayed once — e.g. the complete-gather case under every collision
+    # mode: a consistent fabric never invokes collision resolution.  The
+    # equivalence only emerges from the compiled trajectory, which is why
+    # the slot-driven numpy engine cannot exploit it.  Disabled under the
+    # sanitizer so its per-case conservation/closure ledgers stay 1:1.
+    rep_of = list(range(B))
+    if san is None:
+        seen: dict = {}
+        for b, (case, cp) in enumerate(zip(cases, compiled)):
+            hsh = hashlib.sha1(cp["plan_ids"].tobytes())
+            for spid_l, scap_l in cp["registry"]:
+                hsh.update(spid_l.tobytes())
+                hsh.update(scap_l.tobytes())
+            key = (id(case.wl), int(horizons[b]), hsh.hexdigest())
+            rep_of[b] = seen.setdefault(key, b)
+    reps = sorted(set(rep_of))
+    uidx = {b: u for u, b in enumerate(reps)}
+
+    col_offs = [0]
+    for b in reps:
+        cp = compiled[b]
+        max_j = max((len(p[0]) for p in cp["registry"]), default=0)
+        col_offs.append(col_offs[-1] + _pad_to(max(max_j, 1), _PAD_J))
+    Jtot = col_offs[-1]
+    p_pid = np.zeros((H_pad, Jtot), dtype=np.int32)
+    p_cap = np.zeros((H_pad, Jtot), dtype=np.float32)
+    for u, b in enumerate(reps):
+        cp = compiled[b]
+        base = u * n * n
+        cols = slice(col_offs[u], col_offs[u + 1])
+        jc = col_offs[u + 1] - col_offs[u]
+        reg = cp["registry"]
+        ent_pid = np.full((len(reg), jc), base, dtype=np.int32)
+        ent_cap = np.zeros((len(reg), jc), dtype=np.float32)
+        for i, (spid_l, scap_l) in enumerate(reg):
+            ent_pid[i, :len(spid_l)] = base + spid_l
+            ent_cap[i, :len(spid_l)] = scap_l
+        h_b = int(horizons[b])
+        p_pid[:h_b, cols] = ent_pid[cp["plan_ids"]]
+        p_cap[:h_b, cols] = ent_cap[cp["plan_ids"]]
+        p_pid[h_b:, cols] = base
+
+    f_off, fct, credit, order, bucket, apid, asz = _singlehop_jax_flows(
+        [cases[b].wl for b in reps], n, horizons[reps], H, H_pad)
+    voq0 = np.zeros(len(reps) * n * n, dtype=np.float32)  # lint: allow-dense
+    _record_call("singlehop", (len(reps), n, H_pad, apid.shape[1], Jtot))
+    voq_f, (tx, drained) = fns["singlehop"](voq0, apid, asz, p_pid, p_cap)
+    tx64 = _replay_credit(credit, order, bucket, p_pid, tx, drained, H)
+    voq64 = np.asarray(voq_f, np.float64)
+
+    rows = []
+    for b, (case, cp) in enumerate(zip(cases, compiled)):
+        wl, E = case.wl, case.epoch_slots
+        h_b = int(horizons[b])
+        n_epochs = cp["n_epochs"]
+        u = uidx[rep_of[b]]
+        cols = slice(col_offs[u], col_offs[u + 1])
+        # strictly sequential per-epoch accumulation (np.add.at, not
+        # reduceat: reduceat's pairwise float reduction drifts ~1 ulp from
+        # the numpy loop's slot-by-slot `+=`)
+        ep_idx = np.arange(h_b) // E
+        per_slot = tx64[:h_b, cols].sum(axis=1)
+        delivered_ep = np.zeros(n_epochs)
+        np.add.at(delivered_ep, ep_idx, per_slot)
+        dis_ep = np.zeros(n_epochs)
+        np.add.at(dis_ep, ep_idx, cp["dis_slot"])
+        coll_ep = np.zeros(n_epochs)
+        np.add.at(coll_ep, ep_idx, cp["coll_slot"])
+        ep_len = np.minimum(E, h_b - E * np.arange(n_epochs))
+        ep_cap = ep_len * n * case.d_hat * bits_per_slot
+        ideal = h_b * n * case.d_hat * bits_per_slot
+        delivered = float(delivered_ep.sum())
+        offered = float(wl.size[wl.arrival < h_b].sum())
+        if san is not None:
+            queued = float(voq64[u * n * n:(u + 1) * n * n].sum())
+            san.check_conservation(
+                offered, delivered, queued,
+                label=f"jax:adaptive{b}:conservation", float32=True)
+        result = SimResult(
+            fct_slots=fct[f_off[u]:f_off[u + 1]],
+            flow_size=wl.size,
+            utilization=delivered / ideal,
+            delivered_bits=delivered,
+            offered_bits=offered,
+        )
+        rows.append(AdaptiveRow(
+            label=case.label, policy=case.policy, result=result,
+            epoch_utilization=delivered_ep / ep_cap,
+            epoch_estimate_tv=cp["est_tv"],
+            recomputes=cp["recomputes"], sim_s=0.0, meta=dict(case.meta),
+            stale_slots=cp["stale_slots"],
+            construction_s=cp["construction_s"],
+            dark_slots=cp["dark_slots"],
+            epoch_disagreement=dis_ep / ep_len,
+            epoch_collision_loss=coll_ep / ep_cap,
+            collision_lost_bits=float(coll_ep.sum()),
+            schedule_groups_max=cp["groups_max"],
+            dark_plane_slots=cp["dark_plane_slots"]))
+    if san is not None:
+        rem, completed = credit.remaining_active()
+        san.check_credit_closure(
+            sum(r.result.offered_bits for r in rows),
+            sum(r.result.delivered_bits for r in rows), rem, completed,
+            label="jax:adaptive:credit", float32=True)
+    return rows

@@ -161,7 +161,8 @@ def test_run_sweep_matches_per_case_simulate():
 
 
 def test_run_sweep_jax_backend_aggregates():
-    """backend='jax' reproduces the numpy aggregate (no FCTs tracked)."""
+    """backend='jax' reproduces the numpy aggregate AND the exact per-flow
+    FCT multiset (the f64 credit replay over the f32 device trace)."""
     pytest.importorskip("jax")
     wl = websearch_workload(6, 0.3, 200, BPS, d_hat=2, seed=2)
     s = vermilion_schedule(wl.demand_matrix(), k=3, d_hat=2,
@@ -170,7 +171,7 @@ def test_run_sweep_jax_backend_aggregates():
     r_np = run_sweep(cases, BPS)[0].result
     r_jx = run_sweep(cases, BPS, backend="jax")[0].result
     assert np.isclose(r_np.delivered_bits, r_jx.delivered_bits, rtol=1e-5)
-    assert not np.isfinite(r_jx.fct_slots).any()
+    assert np.array_equal(r_np.fct_slots, r_jx.fct_slots, equal_nan=True)
 
 
 # ---------------------------------------------------------------------------
@@ -182,7 +183,13 @@ def _assert_jax_parity(r_np, r_jx, rtol=1e-3):
     assert np.isclose(r_np.utilization, r_jx.utilization, rtol=rtol)
     assert np.isclose(r_np.delivered_bits, r_jx.delivered_bits, rtol=rtol)
     assert np.isclose(r_np.avg_hops, r_jx.avg_hops, rtol=rtol)
-    assert not np.isfinite(r_jx.fct_slots).any()
+    # small instances route through the per-flow twohop_fct kernel, whose
+    # credit replay reproduces the numpy FCT multiset exactly; the
+    # aggregate-only dense/sparse kernels leave fct_slots all-inf
+    finite = np.isfinite(r_jx.fct_slots)
+    if finite.any():
+        assert np.array_equal(r_np.fct_slots, r_jx.fct_slots,
+                              equal_nan=True)
 
 
 @pytest.mark.parametrize("mode", ["rotorlb", "vlb"])
