@@ -299,6 +299,45 @@ def roofline_row(json_path: str, hlo_path: str | None) -> dict:
     return row
 
 
+def kernel_crosscheck(kernel: str = "twohop_dense",
+                      warn_frac: float = 0.05) -> dict:
+    """Cross-check this file's HLO dot-FLOP parser against the jaxpr
+    analyzer (:mod:`repro.analysis.ir`) on one cached simulator kernel.
+
+    Two independent front-ends count the same quantity: the IR analyzer
+    walks the traced jaxpr (``dot_general`` flops x scan trip count), this
+    parser walks the *compiled* HLO text (``dot`` flops x while-loop
+    multiplicity from XLA's ``known_trip_count`` metadata).  Agreement
+    within ``warn_frac`` validates both; a larger gap means one of the
+    counters lost a loop multiplicity or a contraction dim and prints a
+    warning.  The optimized HLO is required — unoptimized HLO carries no
+    trip-count metadata and under-counts the scan body.
+    """
+    from repro.analysis.ir import _REF_DIMS, analyze_kernel
+    from repro.core.simulator import jax_kernels, kernel_abstract_inputs
+
+    fn = jax_kernels()[kernel]
+    specs = kernel_abstract_inputs(kernel, **_REF_DIMS)
+    hlo_text = fn.lower(*specs).compile().as_text()
+    hlo = analyze_hlo(hlo_text)
+    ir = analyze_kernel(kernel, fn)
+    base = max(ir.dot_flops, 1)
+    rel = abs(hlo["flops"] - ir.dot_flops) / base
+    row = {
+        "kernel": kernel,
+        "hlo_dot_flops": hlo["flops"],
+        "jaxpr_dot_flops": ir.dot_flops,
+        "rel_disagreement": rel,
+        "agree": rel <= warn_frac,
+    }
+    if not row["agree"]:  # pragma: no cover - exercised via warn test
+        print(f"WARNING: roofline/jaxpr flop counters disagree by "
+              f"{rel:.1%} on {kernel} (HLO {hlo['flops']:.6g} vs jaxpr "
+              f"{ir.dot_flops}) — one front-end lost a trip count or "
+              "contraction dim", file=sys.stderr)
+    return row
+
+
 def full_table(results_dir: str = "results/dryrun") -> list[dict]:
     rows = []
     for jp in sorted(glob.glob(os.path.join(results_dir, "*__sp.json"))):
@@ -311,6 +350,12 @@ def full_table(results_dir: str = "results/dryrun") -> list[dict]:
 
 
 def main() -> None:
+    if len(sys.argv) > 1 and sys.argv[1] == "--crosscheck":
+        row = kernel_crosscheck(*sys.argv[2:3])
+        print(f"{row['kernel']}: HLO dot flops {row['hlo_dot_flops']:.6g} "
+              f"vs jaxpr {row['jaxpr_dot_flops']} "
+              f"({row['rel_disagreement']:.2%} apart)")
+        sys.exit(0 if row["agree"] else 1)
     out = full_table(sys.argv[1] if len(sys.argv) > 1 else "results/dryrun")
     os.makedirs("results", exist_ok=True)
     with open("results/roofline.json", "w") as f:

@@ -1,21 +1,36 @@
-"""Repo-specific static analysis + runtime simulation sanitizer.
+"""Repo-specific static analysis, IR-level analysis, and runtime sanitizer.
 
-Two mechanically-enforced layers guard the invariants PRs 1-5 established
-by hand:
+Three mechanically-enforced layers guard the invariants PRs 1-5
+established by hand, ordered by when they fire:
 
-* :mod:`repro.analysis.lint` — an AST-based static lint
+* **Source level** — :mod:`repro.analysis.lint`, an AST-based static lint
   (``python -m repro.analysis.lint src tests``) with four repo-specific
   rules: R1 dense fabric-sized allocations on hot-path modules, R2 jit
   hygiene (un-jitted scans, jit-in-loop, traced branching), R3
   ``pytest.importorskip("jax")`` guards in tests, R4 dtype discipline
   (implicit jnp dtypes, uint16 wrap risk).  Pre-existing violations
-  outside ``core/`` are frozen in ``baseline.json``; new ones fail CI.
-* :mod:`repro.analysis.sanitize` — runtime contract checks the simulator
-  engines run when ``REPRO_SANITIZE=1`` (or ``sanitize=True``): bit
-  conservation, schedule validity / partial-matching plans,
+  outside ``core/`` are frozen in ``baseline.json``; new ones fail CI;
+  ``--update-baseline`` ratchets the freeze down as debt is paid.
+* **IR level** — :mod:`repro.analysis.ir` traces every jitted simulator
+  kernel to its jaxpr (``python -m repro.analysis.ir``) and measures what
+  source-level lint cannot see: peak live-buffer bytes, flop/byte counts
+  (cross-checked against compiled HLO by ``benchmarks/roofline.py``),
+  scan-carry footprints with asserted n-scaling exponents, and dtype
+  leaks that survive tracing.  Budgets live in ``ir_budget.json``;
+  regressions fail CI.  :mod:`repro.analysis.certify`
+  (``python -m repro.analysis.certify``) is the same idea for the
+  *schedule construction*: it statically verifies Theorem-3-level
+  properties of a built ``vermilion_schedule`` — rounding slack, period
+  length, partial matchings, emulated-capacity domination, and the
+  achieved worst-case throughput against the quantized bound — with no
+  simulation, emitting a machine-readable certificate.
+* **Runtime level** — :mod:`repro.analysis.sanitize`, contract checks the
+  simulator engines run when ``REPRO_SANITIZE=1`` (or ``sanitize=True``):
+  bit conservation, schedule validity / partial-matching plans,
   disagreement-accounting closure, and shape/dtype contracts on the core
   kernel entry points.  Checks only observe — a sanitized run is
-  bit-identical to an unsanitized one.
+  bit-identical to an unsanitized one — and violation messages carry the
+  ambient case/epoch/slot context.
 """
 from .sanitize import SanitizeError, Sanitizer, make_sanitizer, sanitize_enabled
 

@@ -43,7 +43,9 @@ outside ``core/``: a violation matching an unconsumed baseline entry
 (same file, rule, and source snippet) is suppressed; anything beyond the
 frozen counts fails.  ``core/`` itself carries zero baseline entries — new
 core violations always fail.  ``--write-baseline`` regenerates the file
-from the current tree.
+from the current tree; ``--update-baseline`` is the shrink-only variant
+(prunes entries whose file is gone, shrinks entries that stopped firing,
+never adds) for routine upkeep.
 """
 from __future__ import annotations
 
@@ -61,6 +63,7 @@ __all__ = [
     "lint_paths",
     "load_baseline",
     "apply_baseline",
+    "update_baseline",
     "main",
     "DEFAULT_BASELINE",
     "HOT_PATH_MODULES",
@@ -466,6 +469,43 @@ def apply_baseline(
     return fresh, suppressed
 
 
+def update_baseline(
+    baseline: dict, violations: list[Violation], scanned: set[str]
+) -> tuple[dict, int, int]:
+    """Shrink-only refresh of an existing baseline.
+
+    Entries whose file no longer exists are pruned outright; entries whose
+    file was scanned this run shrink to the number of still-matching
+    violations (an entry that stopped firing disappears); entries whose
+    file exists but was *not* in the scanned set are kept untouched (a
+    partial ``--update-baseline src`` run must not wipe the tests/
+    freeze).  New violations are never added — the baseline only ever
+    ratchets down.  Returns ``(new_baseline, pruned, shrunk)``.
+    """
+    current: dict[tuple[str, str, str], int] = {}
+    for v in violations:
+        current[_fingerprint(v)] = current.get(_fingerprint(v), 0) + 1
+    entries, pruned, shrunk = [], 0, 0
+    for e in baseline.get("entries", []):
+        if not os.path.exists(e["file"]):
+            pruned += 1
+            continue
+        if e["file"] not in scanned:
+            entries.append(dict(e))
+            continue
+        key = (e["file"], e["rule"], e["snippet"])
+        old = int(e.get("count", 1))
+        have = min(old, current.get(key, 0))
+        current[key] = current.get(key, 0) - have
+        if have < old:
+            shrunk += 1
+        if have > 0:
+            entries.append({"file": e["file"], "rule": e["rule"],
+                            "snippet": e["snippet"], "count": have})
+    return {"version": baseline.get("version", 1),
+            "entries": entries}, pruned, shrunk
+
+
 def write_baseline(violations: list[Violation], path: str) -> dict:
     counts: dict[tuple[str, str, str], int] = {}
     for v in violations:
@@ -493,6 +533,10 @@ def main(argv: list[str] | None = None) -> int:
                     help="report everything, ignoring the baseline")
     ap.add_argument("--write-baseline", action="store_true",
                     help="regenerate the baseline from the current tree")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="shrink-only baseline refresh: prune entries whose "
+                         "file is gone, shrink entries that stopped firing; "
+                         "never adds entries")
     ap.add_argument("--forbid-baseline-under", default="src/repro/core",
                     help="error if the baseline itself holds entries under "
                          "this prefix (core stays burned down to zero); "
@@ -505,6 +549,21 @@ def main(argv: list[str] | None = None) -> int:
         data = write_baseline(violations, args.baseline)
         print(f"wrote {len(data['entries'])} baseline entries "
               f"({len(violations)} violations) to {args.baseline}")
+        return 0
+
+    if args.update_baseline:
+        if not os.path.exists(args.baseline):
+            print(f"no baseline at {args.baseline} — nothing to update "
+                  "(use --write-baseline to create one)")
+            return 1
+        scanned = {_norm(p) for p in _iter_py(args.paths or ["src", "tests"])}
+        data, pruned, shrunk = update_baseline(
+            load_baseline(args.baseline), violations, scanned)
+        with open(args.baseline, "w", encoding="utf-8") as f:
+            json.dump(data, f, indent=1)
+            f.write("\n")
+        print(f"updated {args.baseline}: {len(data['entries'])} entries "
+              f"({pruned} pruned as stale files, {shrunk} shrunk)")
         return 0
 
     suppressed = 0

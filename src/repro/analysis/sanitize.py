@@ -83,14 +83,22 @@ class Sanitizer:
         self.atol = float(atol)      # absolute slack, in bits
         self.rtol32 = float(rtol32)  # float32 (jax) engines
         self.counts: dict[str, int] = {}
+        self.context: str | None = None
 
     # -- plumbing -----------------------------------------------------------
 
     def _ran(self, name: str) -> None:
         self.counts[name] = self.counts.get(name, 0) + 1
 
+    def set_context(self, context: str | None) -> None:
+        """Ambient run context (case label / epoch / slot) prefixed to every
+        violation message — a ledger break at slot 4000 of a 48-case grid
+        names its case instead of being a needle in a haystack."""
+        self.context = context
+
     def _fail(self, name: str, msg: str) -> None:
-        raise SanitizeError(f"[sanitize:{name}] {msg}")
+        ctx = f" [{self.context}]" if self.context else ""
+        raise SanitizeError(f"[sanitize:{name}]{ctx} {msg}")
 
     def _tol(self, scale: float, float32: bool = False) -> float:
         return (self.rtol32 if float32 else self.rtol) * max(

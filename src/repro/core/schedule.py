@@ -22,6 +22,8 @@ from .traffic import hose_normalize, saturate
 
 __all__ = [
     "Schedule",
+    "vermilion_scaled_demands",
+    "vermilion_rounded",
     "vermilion_schedule",
     "vermilion_schedules",
     "per_node_schedules",
@@ -189,6 +191,43 @@ def vermilion_emulated_topology(
                                          normalize=normalize)[0]
 
 
+def vermilion_scaled_demands(
+    mats, k: int = 3, normalize: str = "hose"
+) -> list[np.ndarray]:
+    """Algorithm 1 step 1 per matrix: normalize (max row/col sum <= 1 under
+    ``"hose"``, Sinkhorn-saturate under ``"saturate"``), zero the diagonal,
+    scale by ``(k-1) * n``.  Exposed so the certificate checker
+    (:mod:`repro.analysis.certify`) can re-derive the rounding contract
+    from *exactly* the matrices the construction rounds."""
+    if k < 2:
+        raise ValueError("k >= 2 (k-1 must be positive)")
+    pre = []
+    for m in mats:
+        m = np.asarray(m, dtype=np.float64)
+        n = m.shape[0]
+        if normalize == "saturate":
+            norm = saturate(m)
+        elif normalize == "hose":
+            norm = hose_normalize(m)
+        else:
+            raise ValueError(normalize)
+        np.fill_diagonal(norm, 0.0)
+        pre.append((k - 1) * n * norm)
+    return pre
+
+
+def vermilion_rounded(
+    mats, k: int = 3, normalize: str = "hose"
+) -> list[np.ndarray]:
+    """Algorithm 1 steps 1-2: the integer Bacharach rounding of the scaled
+    demands (one shared flow for the whole batch).  Every entry differs
+    from its scaled demand by < 1 with row/col sums <= (k-1) * n — the
+    doubly-substochastic quantization contract Theorem 3 builds on, and
+    what :mod:`repro.analysis.certify` checks entrywise."""
+    return round_matrices(vermilion_scaled_demands(mats, k=k,
+                                                   normalize=normalize))
+
+
 def vermilion_emulated_topologies(
     mats, k: int = 3, seed: int = 0, normalize: str = "hose"
 ) -> list[np.ndarray]:
@@ -201,23 +240,8 @@ def vermilion_emulated_topologies(
     dominates construction at small n.  A batch of one is bit-identical to
     the historical solo call (``round_matrix`` *is* the one-element batch).
     """
-    if k < 2:
-        raise ValueError("k >= 2 (k-1 must be positive)")
-    pre = []
-    for m in mats:
-        m = np.asarray(m, dtype=np.float64)
-        n = m.shape[0]
-        # 1. normalize (max row/col sum <= 1), upscale, round
-        if normalize == "saturate":
-            norm = saturate(m)
-        elif normalize == "hose":
-            norm = hose_normalize(m)
-        else:
-            raise ValueError(normalize)
-        np.fill_diagonal(norm, 0.0)
-        pre.append((k - 1) * n * norm)
     out = []
-    for r in round_matrices(pre):
+    for r in vermilion_rounded(mats, k=k, normalize=normalize):
         n = r.shape[0]
         rng = np.random.default_rng(seed)
         # 2. traffic-aware multigraph + 3. oblivious residual (one per pair)

@@ -1396,9 +1396,9 @@ def run_sweep(
         if c.mode not in _MODES:
             raise ValueError(c.mode)
         if c.faults and backend == "jax":
-            raise ValueError(
-                f"cases[{i}] ({c.label!r}): fault injection is only "
-                "supported on the numpy backend — the jax kernels have no "
+            raise NotImplementedError(
+                f"cases[{i}] ({c.label!r}): fault injection is not "
+                "implemented on the jax backend — the jax kernels have no "
                 "per-slot fault mask; use backend='numpy' for this case")
     san = make_sanitizer(sanitize)
     groups: dict[tuple, list[int]] = {}
@@ -1925,6 +1925,8 @@ def _run_adaptive_case(case: AdaptiveCase, bits_per_slot: float,
     E, H = case.epoch_slots, wl.horizon
     n_epochs = -(-H // E)
     if san is not None:
+        # any violation below names the offending case of the grid
+        san.set_context(f"case={case.label}")
         san.check_workload(wl)
     san_w = bits_per_slot * (1.0 - case.recfg_frac)
 
@@ -2076,6 +2078,8 @@ def _run_adaptive_case(case: AdaptiveCase, bits_per_slot: float,
         if slot and slot % E == 0:
             epoch = slot // E
             if san is not None:
+                san.set_context(
+                    f"case={case.label} epoch={epoch} slot={slot}")
                 # per-epoch bit ledger: collision loss and dark windows are
                 # capacity-side, so queued bits close the ledger exactly;
                 # tor_fail strands bits, charged to the fault_lost term
@@ -2317,6 +2321,7 @@ def _run_adaptive_case(case: AdaptiveCase, bits_per_slot: float,
         # inside remaining_active, so the closure needs no fault term
         san.check_credit_closure(injected_cum, delivered_all, rem,
                                  completed, label="adaptive:credit")
+        san.set_context(None)
     ep_len = np.minimum(E, H - E * np.arange(n_epochs))
     ep_cap = ep_len * n * case.d_hat * bits_per_slot
     ideal = H * n * case.d_hat * bits_per_slot
@@ -2374,9 +2379,11 @@ def run_adaptive(
     only, so the full epoch trajectory is computable before any serving —
     and the resulting per-slot circuit plans for every case batch through
     the shared single-hop kernel, with per-flow FCTs recovered by the
-    host credit replay.  Cases the device path cannot express (faults,
-    ``repair=True``, ``collision="fullest"``, activation jitter) raise
-    ``ValueError`` up front; use the numpy backend for those.
+    host credit replay.  Cases the device path cannot express raise up
+    front — ``NotImplementedError`` for fault injection (a numpy-only
+    feature, ROADMAP follow-up), ``ValueError`` for ``repair=True``,
+    ``collision="fullest"``, and activation jitter; use the numpy backend
+    for those.
 
     ``sanitize``: run the :mod:`repro.analysis.sanitize` contract checks —
     per-epoch bit conservation, fabric-plan validity, disagreement closure
@@ -2413,12 +2420,22 @@ def run_adaptive(
 
 
 def _check_adaptive_jax_supported(case: "AdaptiveCase", i: int) -> None:
-    """Raise ValueError for AdaptiveCase features the jax backend cannot
-    express (they need per-slot host decisions inside the serving loop)."""
-    reason = None
+    """Raise for AdaptiveCase features the jax backend cannot express
+    (they need per-slot host decisions inside the serving loop).
+
+    Fault injection raises ``NotImplementedError`` — the feature exists on
+    the numpy backend and is an acknowledged gap on this one (ROADMAP's
+    fullest/faults follow-up; pinned in tests/test_faults.py).  The other
+    rejections stay ``ValueError`` (invalid configuration for this
+    backend)."""
     if case.faults:
-        reason = "fault injection"
-    elif case.repair:
+        raise NotImplementedError(
+            f"cases[{i}] ({case.label!r}): fault injection is not "
+            "implemented on the jax backend — it requires per-slot host "
+            "decisions the device scan cannot replay; use backend='numpy' "
+            "for this case")
+    reason = None
+    if case.repair:
         reason = "the repair loop (repair=True)"
     elif case.collision == "fullest":
         reason = "queue-aware arbitration (collision='fullest')"
@@ -2504,6 +2521,81 @@ def compile_cache_stats() -> dict:
             "shape_buckets": sorted(_JAX_SHAPES.get(kernel, set())),
         }
     return stats
+
+
+# Dimension names of each kernel's _record_call bucket tuple, in order —
+# the contract between the compile cache and the IR analyzer
+# (repro.analysis.ir traces kernels at these padded signatures).
+KERNEL_BUCKET_DIMS = {
+    "agg": ("B", "n", "H_pad"),
+    "twohop_dense": ("B", "n", "H_pad", "K"),
+    "twohop_fct": ("B", "n", "H_pad", "K"),
+    "twohop_sparse": ("B", "n", "H_pad", "K", "J", "P"),
+    "singlehop": ("B", "n", "H_pad", "K", "Jtot"),
+}
+
+
+def kernel_abstract_inputs(
+    kernel: str, *, B: int = 2, n: int = 8, H_pad: int | None = None,
+    ns: int | None = None, K: int | None = None, J: int | None = None,
+    P: int | None = None, Jtot: int | None = None,
+) -> tuple:
+    """Abstract input specs (``jax.ShapeDtypeStruct``) for a cached kernel.
+
+    Mirrors, shape- and dtype-exactly, the padded runtime signature the
+    engines feed each ``_JAX_FNS`` kernel (same ``_PAD_H``/``_PAD_K``/
+    ``_PAD_J`` bucketing discipline), so ``jax.make_jaxpr`` over these
+    specs reproduces the jaxpr the compile cache actually traces.  This is
+    the entry point of the IR analyzer (:mod:`repro.analysis.ir`).
+
+    Dimensions: ``B`` cases, ``n`` nodes, ``H_pad`` padded horizon, ``ns``
+    capacity-LUT rows (sum of per-case ``n_slots``; any positive value is
+    shape-valid), ``K`` padded arrivals per slot, ``(P, J)`` two-hop
+    support plans x padded support size, ``Jtot`` total padded circuit
+    columns of the single-hop plan.
+    """
+    import jax
+    import jax.numpy as jnp
+    if kernel not in _JAX_TRACES:
+        raise ValueError(
+            f"unknown kernel {kernel!r} (have {sorted(_JAX_TRACES)})")
+    H_pad = _PAD_H if H_pad is None else int(H_pad)
+    ns = B * n if ns is None else int(ns)
+    K = _PAD_K if K is None else int(K)
+    J = _PAD_J if J is None else int(J)
+    P = 1 if P is None else int(P)
+    Jtot = B * _pad_to(n, _PAD_J) if Jtot is None else int(Jtot)
+    S = jax.ShapeDtypeStruct
+    f32, i32 = jnp.float32, jnp.int32
+    caps_flat = S((ns, n, n), f32)
+    cap_idx = S((H_pad, B), i32)
+    apos = S((H_pad, K, 3), i32)
+    asz = S((H_pad, K), f32)
+    live = S((H_pad, B), f32)
+    direct = S((B, 1, 1), f32)
+    if kernel == "agg":
+        return (caps_flat, cap_idx, S((H_pad, B, n, n), f32), live)
+    if kernel in ("twohop_dense", "twohop_fct"):
+        return (caps_flat, cap_idx, apos, asz, live, direct)
+    if kernel == "twohop_sparse":
+        return (caps_flat, cap_idx, apos, asz, live, S((H_pad,), i32),
+                S((P, J), i32), S((P, J), i32), S((P, J), i32),
+                S((P, J), jnp.bool_), direct)
+    # singlehop
+    return (S((B * n * n,), f32), S((H_pad, K), i32), S((H_pad, K), f32),
+            S((H_pad, Jtot), i32), S((H_pad, Jtot), f32))
+
+
+def kernel_bucket_inputs(kernel: str, bucket: tuple) -> tuple:
+    """Abstract specs from a live ``compile_cache_stats`` shape bucket."""
+    dims = dict(zip(KERNEL_BUCKET_DIMS[kernel], bucket))
+    return kernel_abstract_inputs(kernel, **dims)
+
+
+def jax_kernels() -> dict:
+    """Public handle on the jitted kernel table (for the IR analyzer and
+    benchmarks); builds the kernels on first use."""
+    return _jax_fns()
 
 # Dense (einsum over the full (B, n, n) relay-bucket matrix) vs sparse
 # (padded circuit-support gathers + segment_sum) two-hop kernel crossover,
@@ -3222,6 +3314,7 @@ def _compile_adaptive_plan(case: AdaptiveCase, bits_per_slot: float,
         sched_cache = None
     penalty = int(case.reconfig_penalty_slots)
     if san is not None:
+        san.set_context(f"case={case.label}")
         san.check_workload(wl)
     san_w = bits_per_slot * (1.0 - case.recfg_frac)
 
@@ -3360,6 +3453,9 @@ def _compile_adaptive_plan(case: AdaptiveCase, bits_per_slot: float,
             activate(swap_fp, slot)
         if slot and slot % E == 0:
             epoch = slot // E
+            if san is not None:
+                san.set_context(
+                    f"case={case.label} epoch={epoch} slot={slot}")
             # bit-identical counter replica: the numpy loop adds each
             # slot's stable-ordered arrival slice via one np.add.at; one
             # np.add.at over the epoch's concatenated slice performs the
@@ -3507,6 +3603,8 @@ def _compile_adaptive_plan(case: AdaptiveCase, bits_per_slot: float,
         plan_ids[seg] = ids_u[ps_arr]
         slot = nxt
 
+    if san is not None:
+        san.set_context(None)
     return {
         "registry": registry, "plan_ids": plan_ids,
         "dis_slot": dis_slot, "coll_slot": coll_slot, "est_tv": est_tv,

@@ -24,6 +24,7 @@ __all__ = [
     "vermilion_throughput",
     "oblivious_throughput",
     "theorem3_bound",
+    "quantized_theorem3_bound",
 ]
 
 
@@ -135,3 +136,21 @@ def oblivious_throughput(
 
 def theorem3_bound(k: int, recfg_frac: float = 0.0) -> float:
     return (k - 1) / k * (1.0 - recfg_frac)
+
+
+def quantized_theorem3_bound(
+    k: int, d_hat: int, n: int, recfg_frac: float = 0.0
+) -> float:
+    """Theorem 3's guarantee as a *finite* period actually achieves it.
+
+    A Vermilion period is T = k*n matchings on d_hat planes, so it spans
+    ``n_slots = ceil(k*n / d_hat)`` timeslots; the traffic-aware layer
+    guarantees at least (k-1)*n * (1 - recfg_frac) circuit-slots of direct
+    capacity per demand unit over those slots.  When ``d_hat | k*n`` this
+    is exactly ``theorem3_bound(k, recfg_frac)``; otherwise the ceiling
+    rounds the period up and the achievable bound dips by the slack slot.
+    This is the statically-checkable form :mod:`repro.analysis.certify`
+    verifies a built schedule against.
+    """
+    n_slots = -(-(k * n) // d_hat)
+    return (k - 1) * n * (1.0 - recfg_frac) / (d_hat * n_slots)

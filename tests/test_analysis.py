@@ -10,6 +10,7 @@ from repro.analysis.lint import (
     lint_file,
     load_baseline,
     main as lint_main,
+    update_baseline,
     write_baseline,
 )
 from repro.analysis.sanitize import SanitizeError, Sanitizer, sanitize_enabled
@@ -213,6 +214,56 @@ def test_lint_main_exit_codes(tmp_path):
     assert lint_main([str(clean), "--baseline", str(bad_bl)]) == 2
 
 
+def test_update_baseline_prunes_and_shrinks(tmp_path):
+    tracked = tmp_path / "tracked.py"
+    tracked.write_text("import jax.numpy as jnp\n"
+                       "a = jnp.zeros((2, 2))\n"
+                       "b = jnp.ones((3,))\n")
+    bl_path = tmp_path / "baseline.json"
+    assert lint_main([str(tracked), "--baseline", str(bl_path),
+                      "--write-baseline"]) == 0
+
+    bl = load_baseline(str(bl_path))
+    assert len(bl["entries"]) == 2
+    # inject a stale entry (file deleted since freeze) and an entry for a
+    # file outside the scan scope (must survive untouched)
+    bl["entries"].append({"file": str(tmp_path / "gone.py"), "rule": "R4",
+                          "snippet": "x = jnp.zeros((1,))", "count": 1})
+    outside = {"file": str(tmp_path / "sub" / "kept.py"), "rule": "R4",
+               "snippet": "y = jnp.ones((1,))", "count": 2}
+    (tmp_path / "sub").mkdir()
+    (tmp_path / "sub" / "kept.py").write_text("pass\n")
+    bl["entries"].append(dict(outside))
+    bl_path.write_text(json.dumps(bl))
+
+    # fix one of the two real violations
+    tracked.write_text("import jax.numpy as jnp\n"
+                       "a = jnp.zeros((2, 2))\n"
+                       "b = jnp.ones((3,), jnp.float32)\n")
+    assert lint_main([str(tracked), "--baseline", str(bl_path),
+                      "--update-baseline"]) == 0
+
+    nb = load_baseline(str(bl_path))
+    files = [e["file"] for e in nb["entries"]]
+    assert not any(f.endswith("gone.py") for f in files)     # pruned
+    assert [e for e in nb["entries"]
+            if e["file"] == outside["file"]] == [outside]    # kept verbatim
+    snippets = [e["snippet"] for e in nb["entries"]
+                if e["file"].endswith("tracked.py")]
+    assert len(snippets) == 1 and "zeros" in snippets[0]     # shrunk
+
+    # updating a nonexistent baseline is an error, never a silent create
+    assert lint_main([str(tracked), "--baseline",
+                      str(tmp_path / "none.json"), "--update-baseline"]) == 1
+
+
+def test_update_baseline_never_adds():
+    vs = _mk_violations()
+    nb, pruned, shrunk = update_baseline(
+        {"version": 1, "entries": []}, vs, {v.path for v in vs})
+    assert nb["entries"] == [] and pruned == 0 and shrunk == 0
+
+
 def test_checked_in_baseline_has_no_core_entries():
     from repro.analysis.lint import DEFAULT_BASELINE
     bl = load_baseline(DEFAULT_BASELINE)
@@ -330,3 +381,34 @@ def test_env_var_activates_checks(monkeypatch):
         simulate(s, wl, BPS)
     monkeypatch.setenv("REPRO_SANITIZE", "0")
     simulate(s, wl, BPS)   # env off: no checks, no raise
+
+
+# ---------------------------------------------------------------------------
+# Sanitizer: violation messages carry run context (case / epoch / slot)
+# ---------------------------------------------------------------------------
+
+def test_sanitizer_context_in_message():
+    san = Sanitizer()
+    san.set_context("case=demo epoch=2 slot=128")
+    with pytest.raises(SanitizeError,
+                       match=r"\[case=demo epoch=2 slot=128\]"):
+        san.check_matrix("m", np.array([[-1.0]]))
+    san.set_context(None)   # cleared: bare message again
+    with pytest.raises(SanitizeError) as ei:
+        san.check_matrix("m", np.array([[-1.0]]))
+    assert "case=demo" not in str(ei.value)
+
+
+def test_adaptive_violation_names_case(monkeypatch):
+    from repro.core import simulator as sim
+    orig = sim._CreditState.credit_pairs
+
+    def half_credit(self, pids, s, slot):
+        return orig(self, pids, np.asarray(s) * 0.5, slot)
+
+    monkeypatch.setattr(sim._CreditState, "credit_pairs", half_credit)
+    wl, _ = _small(horizon=180)
+    case = AdaptiveCase(wl=wl, epoch_slots=60, policy="adaptive", d_hat=2,
+                        label="needle-case")
+    with pytest.raises(SanitizeError, match=r"case=needle-case"):
+        run_adaptive([case], BPS, sanitize=True)

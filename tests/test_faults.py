@@ -95,7 +95,8 @@ def test_sweep_rejects_unsupported_fault_engines():
         SweepCase(_sched(8, 2), wl, mode="rotorlb", faults=fs)
     with pytest.raises(ValueError):
         simulate(_sched(8, 2), wl, BPS, mode="rotorlb", faults=fs)
-    with pytest.raises(ValueError):
+    # faults on the jax backend is a missing feature, not a bad argument
+    with pytest.raises(NotImplementedError, match="numpy"):
         run_sweep([SweepCase(_sched(8, 2), wl, faults=fs)], BPS,
                   backend="jax")
 

@@ -184,7 +184,7 @@ def test_sweep_jax_faults_rejected_at_entry():
     fs = FaultSchedule((FaultEvent(10, "plane_down", plane=0),))
     cases = [SweepCase(s, wl, "single_hop", "ok"),
              SweepCase(s, wl, "single_hop", "faulty", faults=fs)]
-    with pytest.raises(ValueError, match=r"faulty.*numpy"):
+    with pytest.raises(NotImplementedError, match=r"faulty.*numpy"):
         run_sweep(cases, BPS, backend="jax")
     # the same grid runs fine on numpy
     assert len(run_sweep(cases, BPS, backend="numpy")) == 2
@@ -201,21 +201,38 @@ def test_sweep_unknown_backend():
 def test_adaptive_jax_rejects_unsupported_features():
     wl = _wl(51, horizon=300)
     fs = FaultSchedule((FaultEvent(10, "plane_down", plane=0),))
+    # faults are a pinned NotImplementedError (ROADMAP follow-up — the jax
+    # kernels carry no per-slot fault mask); the rest are plain ValueErrors
     unsupported = [
-        AdaptiveCase(wl=wl, d_hat=3, epoch_slots=150, faults=fs,
-                     label="faults"),
-        AdaptiveCase(wl=wl, d_hat=3, epoch_slots=150, repair=True,
-                     label="repair"),
-        AdaptiveCase(wl=wl, d_hat=3, epoch_slots=150, collision="fullest",
-                     label="fullest"),
-        AdaptiveCase(wl=wl, d_hat=3, epoch_slots=150,
-                     activation_jitter_slots=3, label="jitter"),
+        (AdaptiveCase(wl=wl, d_hat=3, epoch_slots=150, faults=fs,
+                      label="faults"), NotImplementedError),
+        (AdaptiveCase(wl=wl, d_hat=3, epoch_slots=150, repair=True,
+                      label="repair"), ValueError),
+        (AdaptiveCase(wl=wl, d_hat=3, epoch_slots=150, collision="fullest",
+                      label="fullest"), ValueError),
+        (AdaptiveCase(wl=wl, d_hat=3, epoch_slots=150,
+                      activation_jitter_slots=3, label="jitter"), ValueError),
     ]
-    for case in unsupported:
-        with pytest.raises(ValueError, match=r"numpy"):
+    for case, exc in unsupported:
+        with pytest.raises(exc, match=r"numpy"):
             run_adaptive([case], bits_per_slot=BPS, backend="jax")
         # every one of them still runs on the numpy backend
         run_adaptive([case], bits_per_slot=BPS, backend="numpy")
+
+
+def test_adaptive_jax_faults_pinned_not_implemented():
+    """The faults x jax gap is explicit: a FaultSchedule on the jax
+    backend raises NotImplementedError naming the case and the remedy,
+    and the identical case runs on numpy (the pinned support matrix)."""
+    wl = _wl(52, horizon=300)
+    fs = FaultSchedule((FaultEvent(20, "plane_down", plane=0),))
+    case = AdaptiveCase(wl=wl, d_hat=3, epoch_slots=150, faults=fs,
+                        label="faulted-grid")
+    with pytest.raises(NotImplementedError,
+                       match=r"faulted-grid.*fault injection.*numpy"):
+        run_adaptive([case], bits_per_slot=BPS, backend="jax")
+    rows = run_adaptive([case], bits_per_slot=BPS, backend="numpy")
+    assert len(rows) == 1 and rows[0].label == "faulted-grid"
 
 
 # ---------------------------------------------------------------------------
